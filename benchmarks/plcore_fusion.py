@@ -1,0 +1,70 @@
+"""Paper C1/Fig. 3 — whole-pipeline fusion: intermediate-data traffic of
+the fused PLCore vs. the unfused (GPU-style, Fig. 2a) pipeline.
+
+Two reports:
+  1. analytic HBM bytes per sample (the quantity the paper's architecture
+     eliminates — computed from tensor shapes, exact);
+  2. measured jaxpr intermediate count + wall time of both paths at tiny
+     scale (CPU; the kernel path runs interpret=True so its wall time is
+     NOT indicative — the bytes number is the architectural claim).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs.nerf_icarus import CONFIG as FULL, tiny
+from repro.core import sampling
+from repro.core.plcore import plcore_decls
+from repro.kernels import ops as kops
+from repro.kernels.ref import fused_render_ref
+from repro.models.params import init_params, param_count
+
+
+def analytic_bytes(cfg):
+    per_sample_acts = (cfg.pos_enc_dim + cfg.dir_enc_dim
+                       + cfg.trunk_layers * cfg.trunk_width
+                       + cfg.trunk_width + cfg.color_width + 4)
+    unfused = 2 * 4.0 * per_sample_acts        # write+read each intermediate
+    fused = 4.0 * (1 + 1 + (3 + 3 + 3 + 1) / cfg.n_samples)  # t,w + rays io
+    return unfused, fused
+
+
+def run() -> None:
+    un_f, fu_f = analytic_bytes(FULL)
+    emit("plcore_fusion/full_unfused_bytes_per_sample", 0.0, f"bytes={un_f:.0f}")
+    emit("plcore_fusion/full_fused_bytes_per_sample", 0.0, f"bytes={fu_f:.0f}")
+    emit("plcore_fusion/traffic_reduction", 0.0, f"x{un_f / fu_f:.0f}")
+
+    # measured at tiny scale
+    cfg = tiny()
+    params = init_params(plcore_decls(cfg), jax.random.PRNGKey(0),
+                         "float32")["fine"]
+    R_ = 64
+    rays_o = jnp.zeros((R_, 3)).at[:, 2].set(-4.0)
+    d = jax.random.normal(jax.random.PRNGKey(1), (R_, 3)) * 0.2 \
+        + jnp.array([0.0, 0.0, 1.0])
+    rays_d = d / jnp.linalg.norm(d, axis=-1, keepdims=True)
+    t = jnp.sort(jax.random.uniform(jax.random.PRNGKey(2), (R_, 32)), -1) * 4 + 2
+    deltas = sampling.deltas_from_t(t)
+
+    xla = jax.jit(lambda p, o, dd, tt, dl: fused_render_ref(cfg, p, o, dd, tt, dl)[0])
+    us_xla = time_fn(xla, params, rays_o, rays_d, t, deltas)
+    emit("plcore_fusion/xla_unfused_tiny", us_xla, f"rays={R_}")
+
+    kern = jax.jit(lambda p, o, dd, tt, dl: kops.fused_render(
+        cfg, p, o, dd, tt, dl)[0])
+    us_k = time_fn(kern, params, rays_o, rays_d, t, deltas, iters=1)
+    emit("plcore_fusion/pallas_interpret_tiny", us_k,
+         "NOT_indicative_cpu_interpret_mode")
+
+    # jaxpr intermediate count (proxy for spilled tensors)
+    jaxpr = jax.make_jaxpr(lambda p, o, dd, tt, dl: fused_render_ref(
+        cfg, p, o, dd, tt, dl)[0])(params, rays_o, rays_d, t, deltas)
+    n_eqns = len(jaxpr.jaxpr.eqns)
+    emit("plcore_fusion/xla_graph_eqns", 0.0, f"eqns={n_eqns}")
+
+
+if __name__ == "__main__":
+    run()

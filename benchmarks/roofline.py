@@ -1,0 +1,43 @@
+"""Roofline table — reads the dry-run artifacts (runs/dryrun/*.json) and
+emits the per-(arch x shape x mesh) roofline terms. This is the §Roofline
+deliverable in CSV form; EXPERIMENTS.md renders the same data as a table.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = Path("runs/dryrun")
+
+
+def load_cells(directory: Path = DRYRUN_DIR):
+    cells = []
+    for f in sorted(directory.glob("*.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def run() -> None:
+    cells = load_cells()
+    if not cells:
+        emit("roofline/missing", 0.0,
+             "run_python_-m_repro.launch.dryrun_--all_first")
+        return
+    for c in cells:
+        if "skipped" in c:
+            emit(f"roofline/{c['arch']}/{c['shape']}", 0.0, "skipped")
+            continue
+        mesh = "x".join(str(v) for v in c["mesh"].values())
+        r = c["roofline"]
+        ratio = c.get("useful_flops_ratio")
+        emit(f"roofline/{c['arch']}/{c['shape']}/{mesh}", 0.0,
+             f"compute_s={r['compute_s']:.3e}|memory_s={r['memory_s']:.3e}"
+             f"|collective_s={r['collective_s']:.3e}"
+             f"|dominant={c['dominant']}"
+             f"|useful_flops={'' if ratio is None else f'{ratio:.2f}'}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run table1     # one
+
+Prints ``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig8_rmcm_psnr, plcore_fusion, roofline,
+                            sampling_twopass, table1_energy)
+    suites = {
+        "table1": table1_energy.run,
+        "fig8": fig8_rmcm_psnr.run,
+        "sampling": sampling_twopass.run,
+        "fusion": plcore_fusion.run,
+        "roofline": roofline.run,
+    }
+    pick = [a for a in sys.argv[1:] if not a.startswith("-")]
+    names = pick or list(suites)
+    print("name,us_per_call,derived")
+    for n in names:
+        t0 = time.time()
+        suites[n]()
+        print(f"# suite {n} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Paper §5.1 — the two-pass sampling strategy.
+
+"first generate 64 uniformly distributed samples ... finally generate
+another 128 samples that are more close to the surface of the object."
+
+We quantify WHY the strategy is in the hardware: at an equal total sample
+budget, two-pass (64 coarse + 128 importance) beats single-pass uniform
+sampling on a hard-surface scene. Rendered against the analytic GT field
+(no learned network — isolates the sampler):
+
+CSV rows: psnr at equal budget for uniform-192 vs twopass-64+128, plus the
+sample distribution's concentration statistic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import sampling, volume
+from repro.data import rays as R
+
+
+def _render_with_t(scene, rays_o, rays_d, t):
+    pts = rays_o[..., None, :] + t[..., None] * rays_d[..., None, :]
+    sig = scene.density(pts)
+    dirs = jnp.broadcast_to(rays_d[..., None, :], pts.shape)
+    rgb = scene.color(pts, dirs)
+    out, aux = volume.render_parallel(sig, rgb, sampling.deltas_from_t(t))
+    return volume.white_background(out, aux["acc"]), aux
+
+
+def psnr(a, b):
+    return float(-10 * jnp.log10(jnp.maximum(jnp.mean((a - b) ** 2), 1e-12)))
+
+
+def run(hw: int = 32) -> None:
+    scene = R.sphere_scene(sharp=200.0)   # hard surface: uniform's worst case
+    c2w = R.pose_spherical(40.0, -25.0, scene.radius)
+    ro, rd = R.camera_rays(c2w, hw, hw, 2.2 * hw)   # tight fov: mostly hits
+    ro, rd = ro.reshape(-1, 3), rd.reshape(-1, 3)
+    gt_img, gt_aux = _render_with_t(
+        scene, ro, rd,
+        sampling.stratified(scene.near, scene.far, 4096, ro.shape[:-1]))
+    hit = gt_aux["acc"] > 0.5             # judge only surface-hitting rays
+    key = jax.random.PRNGKey(0)
+
+    def masked_psnr(img):
+        d2 = jnp.sum((img - gt_img) ** 2, -1) * hit
+        mse = float(d2.sum() / (3 * jnp.maximum(hit.sum(), 1)))
+        return -10 * float(jnp.log10(max(mse, 1e-12)))
+
+    # analytic first-hit depth of the sphere (|o + t d| = r), hit rays only
+    b = jnp.sum(ro * rd, -1)
+    disc = b * b - (jnp.sum(ro * ro, -1) - 0.6 ** 2)
+    t_hit = -b - jnp.sqrt(jnp.maximum(disc, 0.0))
+
+    def depth_rmse(t, aux):
+        d = volume.composite_depth(aux["weights"],
+                                   t) / jnp.maximum(aux["acc"], 1e-6)
+        err2 = jnp.square(d - t_hit) * hit
+        return float(jnp.sqrt(err2.sum() / jnp.maximum(hit.sum(), 1)))
+
+    k1, k2 = jax.random.split(key)
+    t_f_last = None
+    for budget, n_c in [(48, 16), (96, 32), (192, 64)]:
+        n_f = budget - n_c
+        t_u = sampling.stratified(scene.near, scene.far, budget,
+                                  ro.shape[:-1], key)
+        img_u, aux_u = _render_with_t(scene, ro, rd, t_u)
+        t_c = sampling.stratified(scene.near, scene.far, n_c,
+                                  ro.shape[:-1], k1)
+        _, aux_c = _render_with_t(scene, ro, rd, t_c)
+        t_f = sampling.importance(t_c, aux_c["weights"], n_f, k2)
+        t_f_last = t_f
+        t_m = sampling.merge_sorted(t_c, t_f)
+        img_t, aux_t = _render_with_t(scene, ro, rd, t_m)
+        emit(f"sampling/uniform_{budget}", 0.0,
+             f"hit_psnr={masked_psnr(img_u):.2f}dB"
+             f"|depth_rmse={depth_rmse(t_u, aux_u):.4f}")
+        emit(f"sampling/twopass_{n_c}p{n_f}", 0.0,
+             f"hit_psnr={masked_psnr(img_t):.2f}dB"
+             f"|depth_rmse={depth_rmse(t_m, aux_t):.4f}")
+
+    # concentration: fine samples of HIT rays inside the surface shell
+    r = jnp.linalg.norm(ro[:, None, :] + t_f_last[..., None] * rd[:, None, :],
+                        axis=-1)
+    near_surf = (jnp.abs(r - 0.6) < 0.1) & hit[:, None]
+    frac = float(near_surf.sum() / jnp.maximum(hit.sum() * t_f_last.shape[-1], 1))
+    emit("sampling/fine_fraction_near_surface_hits", 0.0, f"frac={frac:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,87 @@
+"""End-to-end LM training driver: a ~100M-param qwen2-family model trained
+for a few hundred steps on the deterministic synthetic token stream, with
+periodic checkpoints, a mid-run simulated failure + restart, and a final
+perplexity check against the stream's unigram entropy.
+
+This exercises the full production path at CPU scale: config -> model ->
+sharding rules -> AdamW -> atomic checkpoints -> elastic restore ->
+straggler monitor.
+
+    PYTHONPATH=src python examples/lm_train_e2e.py            # ~100M, 300 steps
+    PYTHONPATH=src python examples/lm_train_e2e.py --tiny     # CI-sized
+"""
+import argparse
+import shutil
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.tokens import TokenStreamConfig, unigram_entropy
+from repro.launch.train import build_parser, run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+
+    ckpt_dir = Path("runs/lm_e2e_ckpt")
+    if ckpt_dir.exists():
+        shutil.rmtree(ckpt_dir)
+
+    if args.tiny:
+        steps = args.steps or 200
+        train_args = ["--arch", "qwen2-1.5b", "--smoke", "--steps", str(steps),
+                      "--batch", "16", "--seq", "64", "--lr", "3e-3"]
+        vocab = 512
+    else:
+        # ~100M-class config: qwen2 family, reduced depth/width but real
+        # vocab-scale structure. Assembled via the driver's smoke hook to
+        # keep one code path; dims below give ~100M params.
+        steps = args.steps or 300
+        import repro.configs as C
+        base = get_config("qwen2-1.5b")
+        cfg100 = base.replace(n_layers=10, d_model=512, n_heads=8,
+                              n_kv_heads=2, head_dim=64, d_ff=2048,
+                              vocab_size=65536, dtype="float32",
+                              param_dtype="float32", remat=False,
+                              attn_chunk=256)
+        n = cfg100.param_count()
+        print(f"[e2e] model params ~{n / 1e6:.0f}M")
+        # the driver binds smoke_config at import time — patch it there
+        import repro.launch.train as T
+        T.smoke_config = lambda name: cfg100
+        train_args = ["--arch", "qwen2-1.5b", "--smoke", "--steps", str(steps),
+                      "--batch", "16", "--seq", "256", "--lr", "6e-4"]
+        vocab = 65536
+
+    train_args += ["--ckpt-dir", str(ckpt_dir), "--ckpt-every", "50",
+                   "--log-every", "20"]
+
+    # phase 1: run to ~60% then 'fail'
+    p1_steps = int(steps * 0.6)
+    a1 = build_parser().parse_args(
+        [x if x != str(steps) else str(p1_steps) for x in train_args])
+    print(f"[e2e] phase 1: {p1_steps} steps, then simulated failure")
+    run(a1)
+
+    # phase 2: restart from checkpoint, finish
+    print("[e2e] phase 2: restart from latest checkpoint")
+    a2 = build_parser().parse_args(train_args)
+    out = run(a2)
+
+    h_uni = unigram_entropy(TokenStreamConfig(vocab_size=vocab))
+    print(f"[e2e] final loss {out['final_loss']:.3f} vs unigram entropy "
+          f"{h_uni:.3f} nats")
+    assert out["final_loss"] < h_uni, \
+        "model failed to beat the context-free bound"
+    print("[e2e] OK — model exploits sequence structure; restart path "
+          "produced a working run")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Quickstart: the ICARUS PLCore pipeline in ~60 lines.
+
+Train a tiny NeRF on a procedural scene for a couple hundred steps (with
+RMCM quantization-aware training), then render a novel view three ways —
+full-precision XLA, RMCM 9-bit weights, and the fused Pallas PLCore
+kernel — and print the PSNRs between them.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 200] [--hw 24]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.nerf_icarus import tiny
+from repro.core import rmcm
+from repro.core.nerf_train import init_nerf_state, make_nerf_train_step
+from repro.core.plcore import render_image
+from repro.data import rays as R
+from repro.optim.adam import AdamConfig
+
+
+def psnr(a, b):
+    return float(-10 * jnp.log10(jnp.maximum(jnp.mean((a - b) ** 2), 1e-12)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--hw", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = tiny()
+    opt_cfg = AdamConfig(lr=5e-3, warmup_steps=20, total_steps=args.steps,
+                         weight_decay=0.0)
+    params, opt_state = init_nerf_state(cfg, opt_cfg, jax.random.PRNGKey(0))
+
+    print("== building procedural scene + GT rays ==")
+    scene = R.blob_scene()
+    ds = R.make_dataset(scene, n_views=5, H=args.hw, W=args.hw,
+                        focal=2.4 * args.hw)
+
+    print(f"== QAT training {args.steps} steps ==")
+    step = jax.jit(make_nerf_train_step(cfg, opt_cfg, qat=True))
+    batches = R.ray_batches(ds, 1024, jax.random.PRNGKey(1))
+    t0 = time.time()
+    for i in range(args.steps):
+        params, opt_state, m = step(params, opt_state, next(batches),
+                                    jax.random.fold_in(jax.random.PRNGKey(2), i))
+        if i % 50 == 0 or i == args.steps - 1:
+            print(f"  step {i:4d}  loss {float(m['loss']):.4f} "
+                  f"psnr {float(m['psnr']):5.2f} dB")
+    print(f"  ({time.time() - t0:.0f}s)")
+
+    print("== rendering a held-out view 3 ways ==")
+    ro, rd, gt = R.holdout_view(scene, args.hw, args.hw,
+                                focal=2.4 * args.hw)
+    img_xla = render_image(cfg, params, ro, rd)
+    quant = {"coarse": rmcm.quantize_tree(params["coarse"]),
+             "fine": rmcm.quantize_tree(params["fine"])}
+    img_rmcm = render_image(cfg, params, ro, rd, quant=quant)
+    img_kern = render_image(cfg, params, ro, rd, use_kernel=True)
+
+    print(f"  PSNR vs GT          : {psnr(img_xla, gt):6.2f} dB")
+    print(f"  PSNR exact vs RMCM  : {psnr(img_xla, img_rmcm):6.2f} dB "
+          f"(paper Fig.8: 48.24 dB at full scale)")
+    print(f"  PSNR exact vs kernel: {psnr(img_xla, img_kern):6.2f} dB "
+          f"(fused PLCore, interpret mode)")
+    assert psnr(img_xla, img_kern) > 40.0
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Surface light field on the PLCore (paper §5.1, Fig. 13).
+
+Fits an SLF network (anisotropic-RFF PEU + MLP engine, no VRU) to the
+radiance leaving an analytic sphere, then renders a view by intersecting
+camera rays with the sphere and querying the SLF at (hit point, direction).
+
+    PYTHONPATH=src python examples/slf_render.py [--steps 400]
+"""
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import slf
+from repro.data import rays as R
+from repro.launch.serve import write_ppm
+from repro.models.params import init_params
+from repro.optim.adam import AdamConfig, adam_update, opt_state_decls
+
+RADIUS = 0.6
+
+
+def surface_radiance(p, d):
+    """Analytic 'photographed object': lambert + specular-ish lobes."""
+    n = p / jnp.maximum(jnp.linalg.norm(p, axis=-1, keepdims=True), 1e-8)
+    light = jnp.asarray([0.57, 0.57, 0.57])
+    lam = jnp.clip(jnp.sum(n * light, -1), 0, 1)
+    spec = jnp.clip(jnp.sum(-d * light, -1), 0, 1) ** 8
+    base = jnp.stack([0.7 + 0.3 * p[..., 0], 0.4 + 0.3 * p[..., 1],
+                      0.5 - 0.2 * p[..., 2]], -1)
+    return jnp.clip(base * (0.25 + 0.75 * lam[..., None])
+                    + 0.3 * spec[..., None], 0, 1)
+
+
+def ray_sphere(ro, rd, r=RADIUS):
+    b = jnp.sum(ro * rd, -1)
+    disc = b * b - (jnp.sum(ro * ro, -1) - r * r)
+    t = -b - jnp.sqrt(jnp.maximum(disc, 0.0))
+    return t, disc > 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--hw", type=int, default=48)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(0)
+    peu = slf.make_slf_peu(key, n_features=96)
+    decls = slf.slf_decls(peu, widths=(128, 128))
+    params = init_params(decls, key, "float32")
+    opt_cfg = AdamConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps,
+                         weight_decay=0.0)
+    opt = init_params(opt_state_decls(decls, opt_cfg), key, "float32")
+
+    @jax.jit
+    def step(params, opt, key):
+        kp, kd = jax.random.split(key)
+        n = jax.random.normal(kp, (2048, 3))
+        p = RADIUS * n / jnp.linalg.norm(n, axis=-1, keepdims=True)
+        d = jax.random.normal(kd, (2048, 3))
+        d = d / jnp.linalg.norm(d, axis=-1, keepdims=True)
+        d = jnp.where(jnp.sum(d * p, -1, keepdims=True) > 0, -d, d)  # inward
+        batch = {"points": p, "dirs": d, "rgb": surface_radiance(p, d)}
+        loss, g = jax.value_and_grad(slf.slf_loss, argnums=1)(peu, params, batch)
+        params, opt, _ = adam_update(opt_cfg, params, g, opt)
+        return params, opt, loss
+
+    t0 = time.time()
+    for i in range(args.steps):
+        params, opt, loss = step(params, opt, jax.random.fold_in(key, i))
+        if i % 100 == 0:
+            print(f"  step {i:4d} loss {float(loss):.5f}")
+    print(f"  trained in {time.time() - t0:.0f}s")
+
+    # render: intersect rays, query SLF at hits
+    c2w = R.pose_spherical(40.0, -15.0, 3.0)
+    H = W = args.hw
+    ro, rd = R.camera_rays(c2w, H, W, 1.4 * W)
+    ro, rd = ro.reshape(-1, 3), rd.reshape(-1, 3)
+    t, hit = ray_sphere(ro, rd)
+    p = ro + t[..., None] * rd
+    pred = slf.slf_eval(peu, params, p, rd)
+    gt = surface_radiance(p, rd)
+    img = jnp.where(hit[:, None], pred, 1.0).reshape(H, W, 3)
+    gt_img = jnp.where(hit[:, None], gt, 1.0).reshape(H, W, 3)
+
+    mse = float(jnp.sum(jnp.square(pred - gt) * hit[:, None])
+                / jnp.maximum(hit.sum() * 3, 1))
+    psnr = -10 * jnp.log10(max(mse, 1e-12))
+    Path("runs").mkdir(exist_ok=True)
+    write_ppm("runs/slf_pred.ppm", img)
+    write_ppm("runs/slf_gt.ppm", gt_img)
+    print(f"  SLF hit-pixel PSNR vs analytic: {float(psnr):.2f} dB "
+          f"-> runs/slf_pred.ppm (paper Fig. 13 analogue)")
+    assert float(psnr) > 25.0
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Render runs/dryrun/*.json into the EXPERIMENTS.md roofline tables."""
+import json
+import sys
+from pathlib import Path
+
+DIR = Path(sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun")
+
+
+def fmt_s(x):
+    return f"{x:.2e}"
+
+
+def main():
+    cells = [json.loads(f.read_text()) for f in sorted(DIR.glob("*.json"))]
+    by_mesh = {}
+    for c in cells:
+        if "skipped" in c:
+            continue
+        mesh = "x".join(str(v) for v in c["mesh"].values())
+        by_mesh.setdefault(mesh, []).append(c)
+
+    for mesh, rows in sorted(by_mesh.items()):
+        print(f"\n### Mesh {mesh} ({rows[0]['chips']} chips)\n")
+        print("| arch | shape | compute_s | memory_s | collective_s | "
+              "dominant | MODEL_FLOPS/HLO | HBM GB/dev |")
+        print("|---|---|---|---|---|---|---|---|")
+        for c in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+            r = c["roofline"]
+            ratio = c.get("useful_flops_ratio")
+            ratio_s = f"{ratio:.2f}" if ratio else "-"
+            mem = c.get("memory_analysis", {})
+            hbm = (mem.get("argument_size_in_bytes", 0)
+                   + mem.get("output_size_in_bytes", 0)
+                   + mem.get("temp_size_in_bytes", 0)) / 1e9
+            print(f"| {c['arch']} | {c['shape']} | {fmt_s(r['compute_s'])} | "
+                  f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+                  f"{c['dominant'].replace('_s', '')} | {ratio_s} | "
+                  f"{hbm:.1f} |")
+
+    skipped = [c for c in cells if "skipped" in c]
+    if skipped:
+        print("\n### Skipped cells\n")
+        seen = set()
+        for c in skipped:
+            key = (c["arch"], c["shape"])
+            if key in seen:
+                continue
+            seen.add(key)
+            print(f"* `{c['arch']} x {c['shape']}`: {c['skipped']}")
+
+
+if __name__ == "__main__":
+    main()

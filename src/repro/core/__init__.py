@@ -1,0 +1,6 @@
+# ICARUS core — the paper's contribution as composable JAX modules:
+#   encoding (PEU), mlp (MLP engine), volume (VRU), sampling (two-pass),
+#   rmcm (approximate MCM quantization), plcore (fused pipeline + dispatch),
+#   sdf / slf (the paper's other MLP-rendering workloads), nerf_train (QAT).
+from repro.core import (  # noqa: F401
+    encoding, mlp, nerf_train, plcore, rmcm, sampling, sdf, slf, volume)

@@ -1,0 +1,161 @@
+"""PLCore — the plenoptic core: PEU -> MLP engine -> VRU (paper Fig. 3).
+
+``render_rays`` executes the complete NeRF pipeline for a batch of rays:
+positions & directions in, pixel colors out, nothing but the final pixels
+leaving the pipeline — the JAX restatement of "no intermediate data going
+off-chip". Under jit the whole two-pass render is one XLA program; with
+``use_kernel=True`` the per-pass encode->MLP->volume-render runs inside ONE
+Pallas kernel with VMEM-resident weights (kernels/fused_plcore.py).
+
+Multi-core scaling (paper §4.1: "the information of different clusters of
+rays are fed to different PLCores") = sharding the ray batch over the
+("pod","data") mesh axes with replicated weights; ``make_render_step``
+builds that jit. The tailored instruction set of the paper maps to the
+launch layer (repro.launch.serve).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.nerf_icarus import NerfConfig
+from repro.core import rmcm, sampling, volume
+from repro.core.encoding import nerf_encoding
+from repro.core.mlp import nerf_mlp_apply, nerf_mlp_decls
+from repro.models.params import Decl
+
+
+# ------------------------------------------------------------------ decls ---
+def plcore_decls(cfg: NerfConfig) -> dict:
+    """Coarse + fine networks (original NeRF trains both)."""
+    return {"coarse": nerf_mlp_decls(cfg), "fine": nerf_mlp_decls(cfg)}
+
+
+# ------------------------------------------------------------- one pass -----
+def _eval_pass(cfg: NerfConfig, params, quant, rays_o, rays_d, t,
+               use_kernel: bool):
+    """Encode -> MLP -> volume-render one sample set. t: (R, N)."""
+    deltas = sampling.deltas_from_t(t, far_cap=1e10)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        rgb_pix, aux = kops.fused_render(cfg, params, rays_o, rays_d, t,
+                                         deltas, quant=quant)
+        return rgb_pix, aux
+    cdt = jnp.dtype(cfg.compute_dtype)
+    pts = rays_o[..., None, :] + t[..., None] * rays_d[..., None, :]
+    pe_pos = nerf_encoding(pts, cfg.pos_freqs).astype(cdt)
+    dirs = rays_d / jnp.linalg.norm(rays_d, axis=-1, keepdims=True)
+    # per-ray (R, 1, de): the split color matmul broadcasts it lazily
+    pe_dir = nerf_encoding(dirs, cfg.dir_freqs).astype(cdt)[..., None, :]
+    if cdt != jnp.float32:
+        params = jax.tree.map(lambda a: a.astype(cdt), params)
+    sigma, rgb = nerf_mlp_apply(cfg, params, pe_pos, pe_dir, quant=quant)
+    # VRU integrates in f32 regardless of the MLP-engine dtype
+    return volume.render_parallel(sigma.astype(jnp.float32),
+                                  rgb.astype(jnp.float32), deltas)
+
+
+def render_rays(cfg: NerfConfig, params: dict, rays_o, rays_d,
+                key: Optional[jax.Array] = None, *,
+                quant: Optional[dict] = None, use_kernel: bool = False,
+                white_bkgd: bool = True) -> dict:
+    """Two-pass render (paper §5.1): n_coarse stratified + n_fine importance.
+
+    rays_o/rays_d: (R, 3). Returns {rgb, rgb_coarse, depth, acc}.
+    quant: optional {"coarse": ..., "fine": ...} RMCM trees.
+    """
+    R = rays_o.shape[:-1]
+    k1 = k2 = None
+    if key is not None:
+        k1, k2 = jax.random.split(key)
+    qc = (quant or {}).get("coarse")
+    qf = (quant or {}).get("fine")
+
+    # ---- pass 1: coarse --------------------------------------------------
+    t_c = sampling.stratified(cfg.near, cfg.far, cfg.n_coarse, R, k1)
+    rgb_c, aux_c = _eval_pass(cfg, params["coarse"], qc, rays_o, rays_d, t_c,
+                              use_kernel)
+
+    # ---- pass 2: importance resample near surfaces ------------------------
+    t_f = sampling.importance(t_c, jax.lax.stop_gradient(aux_c["weights"]),
+                              cfg.n_fine, k2)
+    t_all = sampling.merge_sorted(t_c, t_f)
+    rgb_f, aux_f = _eval_pass(cfg, params["fine"], qf, rays_o, rays_d, t_all,
+                              use_kernel)
+
+    if white_bkgd:
+        rgb_f = volume.white_background(rgb_f, aux_f["acc"])
+        rgb_c = volume.white_background(rgb_c, aux_c["acc"])
+    depth = volume.composite_depth(aux_f["weights"], t_all)
+    return {"rgb": rgb_f, "rgb_coarse": rgb_c, "depth": depth,
+            "acc": aux_f["acc"]}
+
+
+# -------------------------------------------------------- image rendering ---
+def render_image(cfg: NerfConfig, params, rays_o, rays_d, *,
+                 quant=None, use_kernel: bool = False,
+                 rays_per_batch: int = 4096) -> jnp.ndarray:
+    """Tile a full image through the PLCore (deterministic midpoint
+    sampling — inference mode). rays: (H, W, 3) -> rgb (H, W, 3)."""
+    H, W, _ = rays_o.shape
+    flat_o = rays_o.reshape(-1, 3)
+    flat_d = rays_d.reshape(-1, 3)
+    n = flat_o.shape[0]
+    pad = (-n) % rays_per_batch
+    flat_o = jnp.pad(flat_o, ((0, pad), (0, 0)))
+    flat_d = jnp.pad(flat_d, ((0, pad), (0, 0)),
+                     constant_values=1.0)  # avoid zero-norm dirs in padding
+    fn = jax.jit(partial(render_rays, cfg, use_kernel=use_kernel,
+                         white_bkgd=True))
+    outs = []
+    for i in range(0, n + pad, rays_per_batch):
+        o = fn(params, flat_o[i:i + rays_per_batch],
+               flat_d[i:i + rays_per_batch], quant=quant)
+        outs.append(o["rgb"])
+    rgb = jnp.concatenate(outs, axis=0)[:n]
+    return rgb.reshape(H, W, 3)
+
+
+# ------------------------------------------------- multi-core dispatch ------
+def make_render_step(cfg: NerfConfig, mesh, rules, *, use_kernel=False):
+    """jit'd render with rays sharded over the data axes and weights
+    replicated — one PLCore per mesh cell, the paper's scaling model."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ray_sharding = NamedSharding(mesh, P(rules.batch_axes(mesh), None))
+    repl = NamedSharding(mesh, P())
+
+    def step(params, rays_o, rays_d):
+        out = render_rays(cfg, params, rays_o, rays_d, use_kernel=use_kernel)
+        return out["rgb"]
+
+    return jax.jit(step,
+                   in_shardings=(repl, ray_sharding, ray_sharding),
+                   out_shardings=ray_sharding)
+
+
+# ------------------------------------------------------------- dry-run API --
+class PlcoreModel:
+    """Adapter so nerf-icarus joins the dry-run/roofline grid alongside the
+    assigned LM architectures."""
+
+    def __init__(self, cfg: NerfConfig):
+        self.cfg = cfg
+
+    def param_decls(self):
+        return plcore_decls(self.cfg)
+
+    def render_step(self, params, batch):
+        out = render_rays(self.cfg, params, batch["rays_o"], batch["rays_d"])
+        return out["rgb"]
+
+    def input_specs(self, n_rays: int) -> dict:
+        f32 = jnp.float32
+        return {"rays_o": jax.ShapeDtypeStruct((n_rays, 3), f32),
+                "rays_d": jax.ShapeDtypeStruct((n_rays, 3), f32)}
+
+    def input_logical(self) -> dict:
+        return {"rays_o": ("batch", None), "rays_d": ("batch", None)}

@@ -1,0 +1,141 @@
+"""RMCM — reconfigurable multiple-constant-multiplication weight scheme
+(paper §4.3, Fig. 7).
+
+The hardware shares four pre-computed common subexpressions {1x, 3x, 5x, 7x}
+across 64 multipliers; each 9-bit signed-magnitude weight (1 sign + 8
+magnitude bits) is split into two 4-bit nibbles, each nibble selecting a
+subexpression + shift. The full scheme needs {1,3,5,7,9,11,13,15}; the
+*approximated* RMCM (Fig. 7(b)) omits {9,11,13,15} and snaps them to their
+nearest representable neighbours — max relative error 1/9, "compensated
+during the training process" (QAT; optim/qat.py).
+
+On TPU there are real multipliers, so the shift-add sharing itself saves
+nothing — what transfers is the *quantization scheme*: we store weights as
+9 bits (packed: uint8 magnitude + bit-packed signs = 1.125 B/weight vs 2 for
+bf16) and dequantize inside VMEM in the Pallas kernel
+(kernels/rmcm_matmul.py). The memory-side win is what the decode roofline
+actually wants.
+
+Numerics contract (tested):
+* every approximated nibble is a representable value {o << s : o in {1,3,5,7}}
+  (or 0),
+* max relative error of the approximated magnitude vs the exact 8-bit
+  magnitude is exactly 1/9 (attained at 0x99 = 153 -> 0x88 = 136),
+* quantize -> pack -> unpack -> dequantize round-trips bit-exactly.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# nibble -> nearest RMCM-representable value. Representable set:
+# {o << s : o in {1,3,5,7}, s >= 0} (within 4 bits) + {0}
+#   = {0,1,2,3,4,5,6,7,8,10,12,14};  9,11,13,15 snap down (Fig. 7(b)).
+_NIBBLE_TABLE = np.array(
+    [0, 1, 2, 3, 4, 5, 6, 7, 8, 8, 10, 10, 12, 12, 14, 14], np.int32)
+
+REPRESENTABLE = frozenset(
+    {0} | {o << s for o in (1, 3, 5, 7) for s in range(4) if (o << s) < 16})
+
+
+def approx_magnitude(m):
+    """Apply per-nibble RMCM approximation to 8-bit magnitudes (int array)."""
+    m = jnp.asarray(m, jnp.int32)
+    table = jnp.asarray(_NIBBLE_TABLE)
+    hi = table[(m >> 4) & 0xF]
+    lo = table[m & 0xF]
+    return (hi << 4) | lo
+
+
+def quantize(w, axis: int = -2) -> dict:
+    """Float weights -> RMCM representation.
+
+    Per-output-channel absmax scaling: ``axis`` is the reduced (contraction)
+    dim, default -2 for (..., K, N) matmul weights -> scale (..., 1, N),
+    which lets the matmul kernel fold the scale in AFTER K-accumulation.
+    Returns
+      {mag: uint8 (approximated magnitudes), sign: bool, scale: f32}
+    such that dequantize(q) ~= w with |err| <= (1/9 + 1/510)*|w| worst case
+    (1/9 approximation on top of 8-bit rounding).
+    """
+    w = jnp.asarray(w)
+    scale = jnp.max(jnp.abs(w), axis=axis, keepdims=True) / 255.0
+    scale = jnp.maximum(scale, 1e-20)
+    m_exact = jnp.clip(jnp.round(jnp.abs(w) / scale), 0, 255).astype(jnp.int32)
+    mag = approx_magnitude(m_exact).astype(jnp.uint8)
+    return {"mag": mag, "sign": w < 0, "scale": scale.astype(jnp.float32)}
+
+
+def dequantize(q: dict, dtype=jnp.float32):
+    m = q["mag"].astype(jnp.float32)
+    s = jnp.where(q["sign"], -1.0, 1.0)
+    return (s * m * q["scale"]).astype(dtype)
+
+
+def fake_quant(w, axis: int = -2):
+    """w -> dequantize(quantize(w)); differentiable via straight-through
+    (gradient passes unchanged — the QAT estimator the paper's "compensated
+    during training" prescribes)."""
+    return w + jax.lax.stop_gradient(dequantize(quantize(w, axis), w.dtype) - w)
+
+
+# ----------------------------------------------------------------- packing --
+def pack(q: dict) -> dict:
+    """Bit-pack signs 8-per-byte along the leading axis (storage format fed
+    to the Pallas kernel: 1.125 B/weight)."""
+    sign = q["sign"]
+    K = sign.shape[0]
+    pad = (-K) % 8
+    sp = jnp.pad(sign, [(0, pad)] + [(0, 0)] * (sign.ndim - 1))
+    sp = sp.reshape((K + pad) // 8, 8, *sign.shape[1:]).astype(jnp.uint8)
+    bits = jnp.sum(sp << jnp.arange(8, dtype=jnp.uint8).reshape(
+        1, 8, *([1] * (sign.ndim - 1))), axis=1).astype(jnp.uint8)
+    return {"mag": q["mag"], "sign_bits": bits, "scale": q["scale"],
+            "k": K}
+
+
+def unpack(p: dict) -> dict:
+    bits = p["sign_bits"]
+    K = p["k"]
+    expand = ((bits[:, None] >> jnp.arange(8, dtype=jnp.uint8).reshape(
+        1, 8, *([1] * (bits.ndim - 1)))) & 1).astype(bool)
+    sign = expand.reshape(-1, *bits.shape[1:])[:K]
+    return {"mag": p["mag"], "sign": sign, "scale": p["scale"]}
+
+
+# ------------------------------------------------------------- matmul path --
+def rmcm_matmul_ref(x, q: dict, precise: bool = True):
+    """Reference y = x @ dequantize(q). x: (..., K); q over (K, N)."""
+    w = dequantize(q, jnp.float32 if precise else x.dtype)
+    return x @ w.astype(x.dtype)
+
+
+def quantize_tree(params, axis: int = -2):
+    """RMCM-quantize every float matrix (ndim >= 2) leaf of a param tree;
+    vectors (biases, norms) stay exact — matching the paper, which runs the
+    MCM only on the weight matrices."""
+    def one(w):
+        if w.ndim >= 2 and jnp.issubdtype(w.dtype, jnp.floating):
+            return quantize(w, axis)
+        return w
+    return jax.tree.map(one, params)
+
+
+def fake_quant_tree(params, axis: int = -2):
+    def one(w):
+        if w.ndim >= 2 and jnp.issubdtype(w.dtype, jnp.floating):
+            return fake_quant(w, axis)
+        return w
+    return jax.tree.map(one, params)
+
+
+def max_relative_error() -> float:
+    """Analytic worst case of approx_magnitude over all 8-bit magnitudes."""
+    m = np.arange(1, 256)
+    hi = _NIBBLE_TABLE[(m >> 4) & 0xF]
+    lo = _NIBBLE_TABLE[m & 0xF]
+    approx = (hi << 4) | lo
+    return float(np.max(np.abs(approx - m) / m))

@@ -1,0 +1,87 @@
+"""Ray sampling — the paper's two-pass strategy (§5.1).
+
+"for every pixel to render ... first generate 64 uniformly distributed
+samples within the visible range, calculate density distribution along the
+pixel ray, finally generate another 128 samples that are more close to the
+surface of the object."
+
+``stratified``  — pass 1: jittered-uniform t values in [near, far].
+``importance``  — pass 2: inverse-CDF resampling of the coarse volume-
+                  rendering weights (NeRF's sample_pdf), deterministic
+                  midpoint mode for inference.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def stratified(near: float, far: float, n: int, shape=(),
+               key: Optional[jax.Array] = None, lindisp: bool = False):
+    """Jittered-uniform samples. Returns t: (*shape, n), sorted ascending."""
+    edges = jnp.linspace(0.0, 1.0, n + 1)
+    lo, hi = edges[:-1], edges[1:]
+    if key is not None:
+        u = jax.random.uniform(key, tuple(shape) + (n,))
+    else:
+        u = 0.5
+    s = lo + (hi - lo) * u
+    s = jnp.broadcast_to(s, tuple(shape) + (n,))
+    if lindisp:
+        return 1.0 / (1.0 / near * (1.0 - s) + 1.0 / far * s)
+    return near + (far - near) * s
+
+
+def importance(t_mid, weights, n: int, key: Optional[jax.Array] = None,
+               eps: float = 1e-5):
+    """Inverse-CDF sampling from piecewise-constant pdf over bins.
+
+    t_mid: (..., M) bin midpoints (coarse sample positions);
+    weights: (..., M) coarse volume-rendering weights (bins = gaps between
+    midpoints, M-1 intervals). Returns (..., n) new t values, sorted.
+    """
+    # pdf over the M-1 intervals between midpoints (drop edge weights, as NeRF)
+    w = weights[..., 1:-1] + eps
+    pdf = w / jnp.sum(w, axis=-1, keepdims=True)
+    cdf = jnp.cumsum(pdf, axis=-1)
+    cdf = jnp.concatenate([jnp.zeros_like(cdf[..., :1]), cdf], axis=-1)  # (..., M-1)
+
+    if key is not None:
+        u = jax.random.uniform(key, cdf.shape[:-1] + (n,))
+    else:
+        u = jnp.linspace(0.0, 1.0 - 1e-6, n)
+        u = jnp.broadcast_to(u, cdf.shape[:-1] + (n,))
+
+    idx = jnp.clip(jnp.searchsorted(cdf, u, side="right") - 1,
+                   0, cdf.shape[-1] - 2) if cdf.ndim == 1 else \
+        jnp.clip(_batched_searchsorted(cdf, u) - 1, 0, cdf.shape[-1] - 2)
+
+    cdf_lo = jnp.take_along_axis(cdf, idx, axis=-1)
+    cdf_hi = jnp.take_along_axis(cdf, idx + 1, axis=-1)
+    t_lo = jnp.take_along_axis(t_mid[..., :-1], idx, axis=-1)
+    t_hi = jnp.take_along_axis(t_mid[..., 1:], idx, axis=-1)
+    denom = jnp.where(cdf_hi - cdf_lo < 1e-8, 1.0, cdf_hi - cdf_lo)
+    frac = (u - cdf_lo) / denom
+    return t_lo + frac * (t_hi - t_lo)
+
+
+def _batched_searchsorted(cdf, u):
+    """searchsorted over the last axis for arbitrary leading batch dims."""
+    return jax.vmap(lambda c, q: jnp.searchsorted(c, q, side="right"),
+                    in_axes=(0, 0))(cdf.reshape(-1, cdf.shape[-1]),
+                                    u.reshape(-1, u.shape[-1])
+                                    ).reshape(u.shape)
+
+
+def merge_sorted(t_a, t_b):
+    """Union of two sample sets along a ray, sorted (coarse + fine pass)."""
+    return jnp.sort(jnp.concatenate([t_a, t_b], axis=-1), axis=-1)
+
+
+def deltas_from_t(t, far_cap: float = 1e10):
+    """delta_i = t_{i+1} - t_i, final sample capped (paper eq. (4) note)."""
+    d = t[..., 1:] - t[..., :-1]
+    last = jnp.full_like(t[..., :1], far_cap)   # from t: correct even at N=1
+    return jnp.concatenate([d, last], axis=-1)

@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   fused_plcore — C1: PE + MLP + volume rendering in one kernel, VMEM-pinned
+#                  weights (weight-stationary batch-computing, C6)
+#   rmcm_matmul  — C2: 9-bit RMCM dequant-fused matmul (1.125 B/weight)
+# ops.py = jit'd wrappers (interpret=True off-TPU); ref.py = pure-jnp oracles.

@@ -1,0 +1,189 @@
+"""Fused PLCore Pallas kernel — the whole NeRF pipeline in ONE kernel
+(paper C1: "a PLCore takes in positions & directions and renders the
+corresponding pixel colors without any intermediate data going off-chip").
+
+TPU restatement: grid over ray tiles; per grid step the kernel
+  1. reconstructs sample positions from the ray parametrization
+     (rays_o + t * rays_d) — rays cross HBM, not the 192x-larger sample
+     cloud;
+  2. runs the PEU with the paper's double-angle recurrence (sin/cos of
+     octave k+1 from octave k: 2 muls + 1 add, one transcendental pair
+     total — §4.2);
+  3. runs every MLP layer MXU-shaped out of VMEM-resident weights
+     (weight-stationary across all grid steps = the paper's
+     batch-computing, C6); optionally dequantizing RMCM 9-bit weights
+     in-register (C2);
+  4. volume-renders with the eq. (5) streaming recurrence (VRU, C3);
+  5. writes only pixel colors + per-sample weights (the latter feed the
+     two-pass importance sampler) back to HBM.
+
+HBM traffic per tile: rays in (rt x ~8 floats), pixels out (rt x 3) + the
+coarse-pass weights (rt x N) — vs. the unfused pipeline's O(rt x N x
+(63 + 27 + 4 x 256)) intermediate tensors. benchmarks/plcore_fusion.py
+quantifies it.
+
+VMEM: all weights (~1.19M params = 4.8 MB f32, 1.3 MB RMCM-packed) + a
+(rt*N, P) activation slab; ops.py picks rt so the slab fits the ~16 MB
+budget.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.configs.nerf_icarus import NerfConfig
+from repro.kernels.rmcm_matmul import _unpack_signs
+
+
+def _pe_double_angle(x, n_freqs: int):
+    """[x, sin(2^0 x), cos(2^0 x), ..., sin(2^{L-1} x), cos(2^{L-1} x)] via
+    the PEU double-angle recurrence (one sin/cos pair total)."""
+    s, c = jnp.sin(x), jnp.cos(x)
+    feats = [x]
+    for _ in range(n_freqs):
+        feats.append(s)
+        feats.append(c)
+        s, c = 2.0 * s * c, 1.0 - 2.0 * s * s
+    return jnp.concatenate(feats, axis=-1)
+
+
+def _make_kernel(cfg: NerfConfig, rt: int, N: int, P: int, P2: int,
+                 quantized: bool):
+    W, C = cfg.trunk_width, cfg.color_width
+    pe_dim, de_dim = cfg.pos_enc_dim, cfg.dir_enc_dim
+    T = rt * N
+
+    def _dq(mag, sgn_bits, scale, rows_padded):
+        m = mag.astype(jnp.float32)
+        sg = _unpack_signs(sgn_bits, rows_padded).astype(jnp.float32)
+        return m * (1.0 - 2.0 * sg) * scale
+
+    def kernel(o_ref, d_ref, t_ref, dl_ref, *refs):
+        if quantized:
+            (tw_mag, tw_sgn, tw_scl, tb, sw, sb, fw_mag, fw_sgn, fw_scl, fb,
+             cw_mag, cw_sgn, cw_scl, cb, rw, rb,
+             rgb_o, w_o, acc_o) = refs
+        else:
+            (tw, tb, sw, sb, fw, fb, cw, cb, rw, rb,
+             rgb_o, w_o, acc_o) = refs
+
+        o = o_ref[...].astype(jnp.float32)                 # (rt, 3)
+        d = d_ref[...].astype(jnp.float32)                 # (rt, 3)
+        ts = t_ref[...].astype(jnp.float32)                # (rt, N)
+
+        # ---- positions & PEU (double-angle) ----------------------------
+        pts = (o[:, None, :] + ts[..., None] * d[:, None, :]).reshape(T, 3)
+        pe = _pe_double_angle(pts, cfg.pos_freqs)          # (T, pe_dim)
+        dn = d * jax.lax.rsqrt(jnp.sum(d * d, -1, keepdims=True))
+        ped = _pe_double_angle(dn, cfg.dir_freqs)          # (rt, de_dim)
+        ped = jnp.broadcast_to(ped[:, None, :],
+                               (rt, N, de_dim)).reshape(T, de_dim)
+
+        # ---- MLP engine (MONB) ------------------------------------------
+        def trunk_weight(i, rows):
+            if quantized:
+                full = _dq(tw_mag[i], tw_sgn[i], tw_scl[i], P)
+            else:
+                full = tw[i]
+            return full[:rows]
+
+        h = pe
+        for i in range(cfg.trunk_layers):
+            if i == 0:
+                a, din = pe, pe_dim
+            elif i in cfg.skip_at:
+                a, din = jnp.concatenate([h, pe], axis=-1), W + pe_dim
+            else:
+                a, din = h, W
+            h = jax.nn.relu(
+                jnp.dot(a, trunk_weight(i, din),
+                        preferred_element_type=jnp.float32) + tb[i])
+
+        # ---- heads: sigma (SONB, exact), feature, color branch ----------
+        sigma = (jnp.dot(h, sw[...], preferred_element_type=jnp.float32)
+                 + sb[...])[:, 0]
+        if quantized:
+            fw_full = _dq(fw_mag[...], fw_sgn[...], fw_scl[...], W)
+            cw_full = _dq(cw_mag[...], cw_sgn[...], cw_scl[...], P2)
+        else:
+            fw_full, cw_full = fw[...], cw[...]
+        feat = jnp.dot(h, fw_full, preferred_element_type=jnp.float32) + fb[...]
+        hc_in = jnp.concatenate([feat, ped], axis=-1)      # (T, W+de)
+        hc = jax.nn.relu(
+            jnp.dot(hc_in, cw_full[:W + de_dim],
+                    preferred_element_type=jnp.float32) + cb[...])
+        raw = jnp.dot(hc, rw[...], preferred_element_type=jnp.float32) + rb[...]
+        rgb = jax.nn.sigmoid(raw).reshape(rt, N, 3)
+
+        # ---- VRU: eq.(5) streaming recurrence ---------------------------
+        x = -(jnp.maximum(sigma, 0.0).reshape(rt, N)) * dl_ref[...]
+
+        def body(i, carry):
+            Tt, acc, wbuf = carry
+            T_next = Tt * jnp.exp(x[:, i])                 # T_{i+1}=T_i e^{x_i}
+            w = Tt - T_next
+            acc = acc + w[:, None] * rgb[:, i]
+            wbuf = jax.lax.dynamic_update_slice(wbuf, w[:, None], (0, i))
+            return T_next, acc, wbuf
+
+        Tt, accum, wbuf = jax.lax.fori_loop(
+            0, N, body, (jnp.ones((rt,), jnp.float32),
+                         jnp.zeros((rt, 3), jnp.float32),
+                         jnp.zeros((rt, N), jnp.float32)))
+        rgb_o[...] = accum.astype(rgb_o.dtype)
+        w_o[...] = wbuf.astype(w_o.dtype)
+        acc_o[...] = (1.0 - Tt).astype(acc_o.dtype)
+
+    return kernel
+
+
+def fused_plcore_call(cfg: NerfConfig, weights: dict, rays_o, rays_d, t,
+                      deltas, *, rt: int, quantized: bool,
+                      interpret: bool = True):
+    """Low-level pallas_call. rays: (R, 3) with R % rt == 0; t/deltas (R, N).
+
+    ``weights``: layout from ops.stack_plcore_weights (P/P2 row-padded,
+    trunk stacked (L, P, W)). Returns (rgb (R,3), w (R,N), acc (R,)).
+    """
+    R, N = t.shape
+    assert R % rt == 0, (R, rt)
+    P = weights["meta"]["P"]
+    P2 = weights["meta"]["P2"]
+    order = (["trunk_mag", "trunk_sgn", "trunk_scl", "trunk_b",
+              "sigma_w", "sigma_b", "feat_mag", "feat_sgn", "feat_scl",
+              "feat_b", "color0_mag", "color0_sgn", "color0_scl", "color0_b",
+              "rgb_w", "rgb_b"] if quantized else
+             ["trunk_w", "trunk_b", "sigma_w", "sigma_b", "feat_w", "feat_b",
+              "color0_w", "color0_b", "rgb_w", "rgb_b"])
+    w_arrays = [weights[k] for k in order]
+
+    grid = (R // rt,)
+    ray_spec = pl.BlockSpec((rt, 3), lambda i: (i, 0))
+    samp_spec = pl.BlockSpec((rt, N), lambda i: (i, 0))
+
+    def pinned(a):  # whole tensor resident every grid step (weight-stationary)
+        nd = a.ndim
+        return pl.BlockSpec(a.shape, lambda i, nd=nd: (0,) * nd)
+
+    out_shape = [jax.ShapeDtypeStruct((R, 3), jnp.float32),
+                 jax.ShapeDtypeStruct((R, N), jnp.float32),
+                 jax.ShapeDtypeStruct((R,), jnp.float32)]
+    out_specs = [pl.BlockSpec((rt, 3), lambda i: (i, 0)),
+                 pl.BlockSpec((rt, N), lambda i: (i, 0)),
+                 pl.BlockSpec((rt,), lambda i: (i,))]
+
+    kernel = _make_kernel(cfg, rt, N, P, P2, quantized)
+    rgb, w, acc = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[ray_spec, ray_spec, samp_spec, samp_spec]
+                 + [pinned(a) for a in w_arrays],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(rays_o, rays_d, t, deltas, *w_arrays)
+    return rgb, w, acc

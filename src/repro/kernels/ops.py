@@ -1,0 +1,140 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the kernel body then runs in Python
+on CPU — the validation mode this container uses); on a real TPU backend it
+compiles through Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.nerf_icarus import NerfConfig
+from repro.core import rmcm
+from repro.kernels import fused_plcore as _fp
+from repro.kernels import rmcm_matmul as _rm
+
+
+def interpret_default() -> bool:
+    return jax.devices()[0].platform != "tpu"
+
+
+def _rup(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+# ------------------------------------------------------------ rmcm matmul --
+def rmcm_matmul(x, packed: dict, *, bm: int = 128, bn: int = 128,
+                bk: int = 256, interpret: Optional[bool] = None):
+    """y = x @ W_rmcm for (..., K) inputs (leading dims flattened)."""
+    it = interpret_default() if interpret is None else interpret
+    lead = x.shape[:-1]
+    y = _rm.rmcm_matmul(x.reshape(-1, x.shape[-1]), packed,
+                        bm=bm, bn=bn, bk=bk, interpret=it)
+    return y.reshape(*lead, y.shape[-1])
+
+
+# --------------------------------------------------- fused PLCore weights --
+def _pack_signs(sign):
+    """(K, N) bool -> (K/8, N) uint8 (K % 8 == 0)."""
+    K = sign.shape[0]
+    assert K % 8 == 0, K
+    sp = sign.reshape(K // 8, 8, *sign.shape[1:]).astype(jnp.uint8)
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(1, 8, *([1] * (sign.ndim - 1)))
+    return jnp.sum(sp << shifts, axis=1).astype(jnp.uint8)
+
+
+def _place_rows(src, rows: int):
+    """Zero-pad a (k, n) array to (rows, n)."""
+    return jnp.pad(src, ((0, rows - src.shape[0]), (0, 0)))
+
+
+def stack_plcore_weights(cfg: NerfConfig, params: dict,
+                         quant: Optional[dict] = None) -> dict:
+    """Kernel weight layout: trunk stacked (L, P, W) with per-layer row
+    semantics (layer 0: PE rows; skip layer: [h | PE] rows; else: h rows);
+    color0 row-padded to P2. P/P2 are 128-aligned for the MXU.
+
+    quant != None -> RMCM layout: uint8 magnitudes + bit-packed signs +
+    (1, out) scales for trunk/feat/color0 (MONB); sigma/rgb stay exact
+    (SONB)."""
+    W, C = cfg.trunk_width, cfg.color_width
+    pe, de = cfg.pos_enc_dim, cfg.dir_enc_dim
+    L = cfg.trunk_layers
+    P = _rup(W + pe, 128)
+    P2 = _rup(W + de, 128)
+    out = {"meta": {"P": P, "P2": P2}}
+
+    tb = jnp.stack([params["trunk"][f"l{i}"]["b"] for i in range(L)])
+    out["trunk_b"] = tb.astype(jnp.float32)
+    out["sigma_w"] = params["sigma"]["w"].astype(jnp.float32)
+    out["sigma_b"] = params["sigma"]["b"].astype(jnp.float32)
+    out["feat_b"] = params["feat"]["b"].astype(jnp.float32)
+    out["color0_b"] = params["color0"]["b"].astype(jnp.float32)
+    out["rgb_w"] = params["rgb"]["w"].astype(jnp.float32)
+    out["rgb_b"] = params["rgb"]["b"].astype(jnp.float32)
+
+    if quant is None:
+        out["trunk_w"] = jnp.stack(
+            [_place_rows(params["trunk"][f"l{i}"]["w"].astype(jnp.float32), P)
+             for i in range(L)])
+        out["feat_w"] = params["feat"]["w"].astype(jnp.float32)
+        out["color0_w"] = _place_rows(
+            params["color0"]["w"].astype(jnp.float32), P2)
+        return out
+
+    def q3(qd, rows):
+        """One quantized matrix -> (mag (rows,n) u8, sgn (rows/8,n) u8,
+        scale (1,n) f32)."""
+        mag = _place_rows(qd["mag"], rows)
+        sgn = _place_rows(qd["sign"], rows)
+        return mag, _pack_signs(sgn), qd["scale"].astype(jnp.float32)
+
+    mags, sgns, scls = [], [], []
+    for i in range(L):
+        m, s, sc = q3(quant["trunk"][f"l{i}"]["w"], P)
+        mags.append(m), sgns.append(s), scls.append(sc)
+    out["trunk_mag"] = jnp.stack(mags)
+    out["trunk_sgn"] = jnp.stack(sgns)
+    out["trunk_scl"] = jnp.stack(scls)
+    out["feat_mag"], out["feat_sgn"], out["feat_scl"] = q3(
+        quant["feat"]["w"], _rup(W, 8))
+    out["color0_mag"], out["color0_sgn"], out["color0_scl"] = q3(
+        quant["color0"]["w"], P2)
+    return out
+
+
+# ------------------------------------------------------------ fused render --
+def pick_ray_tile(cfg: NerfConfig, n_samples: int,
+                  vmem_budget_bytes: int = 4 << 20) -> int:
+    """rt so the (rt * N, P) fp32 activation slab fits the VMEM budget."""
+    P = _rup(cfg.trunk_width + cfg.pos_enc_dim, 128)
+    rows = vmem_budget_bytes // (P * 4)
+    rt = max(8, (rows // n_samples) // 8 * 8)
+    return min(rt, 128)
+
+
+def fused_render(cfg: NerfConfig, params: dict, rays_o, rays_d, t, deltas,
+                 *, quant: Optional[dict] = None, rt: Optional[int] = None,
+                 interpret: Optional[bool] = None):
+    """Drop-in for the unfused pass: (rgb (R,3), {weights, acc})."""
+    it = interpret_default() if interpret is None else interpret
+    R, N = t.shape
+    rt = rt or pick_ray_tile(cfg, N)
+    rt = min(rt, _rup(R, 8))
+    Rp = _rup(R, rt)
+    if Rp != R:
+        padn = Rp - R
+        rays_o = jnp.concatenate([rays_o, rays_o[-1:].repeat(padn, 0)])
+        rays_d = jnp.concatenate([rays_d, rays_d[-1:].repeat(padn, 0)])
+        t = jnp.concatenate([t, t[-1:].repeat(padn, 0)])
+        deltas = jnp.concatenate([deltas, deltas[-1:].repeat(padn, 0)])
+    weights = stack_plcore_weights(cfg, params, quant)
+    rgb, w, acc = _fp.fused_plcore_call(
+        cfg, weights, rays_o, rays_d, t, deltas,
+        rt=rt, quantized=quant is not None, interpret=it)
+    return rgb[:R], {"weights": w[:R], "acc": acc[:R]}

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+``fused_render_ref`` composes the already-tested core modules (PEU ->
+MLP engine -> VRU streaming recurrence) — the kernel must match it
+elementwise. ``rmcm_matmul_ref`` unpacks the 9-bit storage format and does
+the dense matmul in fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.configs.nerf_icarus import NerfConfig
+from repro.core import rmcm, volume
+from repro.core.encoding import nerf_encoding
+from repro.core.mlp import nerf_mlp_apply
+
+
+def fused_render_ref(cfg: NerfConfig, params: dict, rays_o, rays_d, t,
+                     deltas, quant: Optional[dict] = None):
+    """(rays_o/rays_d (R,3), t/deltas (R,N)) -> (rgb (R,3), aux).
+
+    Exactly the math the fused PLCore kernel implements: encode positions
+    (and directions) from the ray parametrization, run the NeRF MLP on
+    every sample, volume-render with the eq.(5) recurrence.
+    """
+    pts = rays_o[..., None, :] + t[..., None] * rays_d[..., None, :]
+    pe_pos = nerf_encoding(pts, cfg.pos_freqs)
+    dirs = rays_d / jnp.linalg.norm(rays_d, axis=-1, keepdims=True)
+    pe_dir = nerf_encoding(dirs, cfg.dir_freqs)[..., None, :]   # (R,1,de)
+    sigma, rgb = nerf_mlp_apply(cfg, params, pe_pos, pe_dir, quant=quant)
+    out, aux = volume.render_scan(sigma, rgb, deltas)
+    return out, {"weights": aux["weights"], "acc": aux["acc"]}
+
+
+def rmcm_matmul_ref(x, packed: dict):
+    """y = x @ dequantize(unpack(packed)), fp32 accumulate."""
+    q = rmcm.unpack(packed)
+    w = rmcm.dequantize(q, jnp.float32)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)

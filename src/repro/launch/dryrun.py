@@ -1,0 +1,449 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first backend init). Everything below is ordinary code.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract the roofline terms from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
+
+Per cell this:
+  1. builds abstract params / optimizer state / cache / batch
+     (ShapeDtypeStruct only — nothing is allocated),
+  2. jit-lowers the step with explicit in/out shardings and compiles,
+  3. records memory_analysis(), cost_analysis(), and collective bytes
+     parsed from the optimized HLO, into runs/dryrun/<cell>.json.
+"""
+import argparse
+import json
+import re
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+from repro.launch.steps import make_train_step
+from repro.models.model_zoo import build_model
+from repro.models.params import abstract_params, is_decl, param_count
+from repro.optim.adam import AdamConfig, opt_state_decls
+from repro.runtime.sharding import Rules, pspecs
+
+# ----------------------------------------------------------- HLO parsing ---
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(.+?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+
+# wire-bytes factor per collective (ring algorithms, (G-1)/G ~= 1)
+_WIRE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-op-kind result bytes + modeled wire bytes, from optimized HLO."""
+    out = {k: 0 for k in _WIRE_FACTOR}
+    counts = {k: 0 for k in _WIRE_FACTOR}
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        out[kind] += _type_bytes(type_str)
+        counts[kind] += 1
+    wire = sum(out[k] * _WIRE_FACTOR[k] for k in out)
+    return {"result_bytes": out, "op_counts": counts, "wire_bytes": int(wire)}
+
+
+# ----------------------------------------------------------- cell set-up ---
+def sds_shardings(mesh, rules, abstract_tree, logical_tree):
+    """NamedShardings for input ShapeDtypeStructs from logical axis names."""
+    def one(sds, logical):
+        parts = [rules.resolve(l, mesh, dim)
+                 for dim, l in zip(sds.shape, logical)]
+        return NamedSharding(mesh, P(*parts))
+    return jax.tree.map(one, abstract_tree, logical_tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def sharded_bytes(decls, mesh, rules, dtype_default: str) -> int:
+    """Analytic per-device bytes for a Decl tree under its sharding."""
+    total = 0
+    for d in jax.tree.leaves(decls, is_leaf=is_decl):
+        spec = rules.spec_for(d, mesh)
+        shard = 1
+        for part in spec:
+            if part is None:
+                continue
+            for ax in (part if isinstance(part, tuple) else (part,)):
+                shard *= mesh.shape[ax]
+        itm = jnp.dtype(d.dtype or dtype_default).itemsize
+        total += int(np.prod(d.shape)) * itm // shard
+    return total
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N active for MoE."""
+    n = cfg.param_count(active_only=cfg.family == "moe")
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+# nerf-icarus joins the grid with its own shapes (rays per render step)
+NERF_SHAPES = {"render_800": 800 * 800, "render_quarter": 400 * 400}
+
+
+def lower_nerf_cell(shape_name: str, *, multi_pod: bool,
+                    verbose: bool = True, optimized: bool = False) -> dict:
+    """Dry-run the paper's own workload: a two-pass PLCore render step.
+
+    optimized=True runs the bf16-activation variant (§Perf lever for the
+    memory-bound render: halves every intermediate byte; the MXU computes
+    bf16 natively)."""
+    import dataclasses
+
+    from repro.configs.nerf_icarus import CONFIG as ncfg
+    from repro.core.plcore import PlcoreModel
+
+    if optimized:
+        ncfg = dataclasses.replace(ncfg, compute_dtype="bfloat16")
+    n_rays = NERF_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = Rules()
+    model = PlcoreModel(ncfg)
+    decls = model.param_decls()
+    p_abs = abstract_params(decls, "float32")
+    repl = NamedSharding(mesh, P())
+    p_shard = jax.tree.map(lambda _: repl, p_abs)   # PLCore: weights replicated
+    in_abs = model.input_specs(n_rays)
+    # optimized: ray clusters dispatch to EVERY PLCore = shard rays over
+    # the full mesh (the paper's many-core model); baseline shards over
+    # the data axes only and leaves the model axis replicated.
+    ray_axes = tuple(mesh.shape) if optimized else rules.batch_axes(mesh)
+    ray_shard = NamedSharding(mesh, P(ray_axes, None))
+    in_shard = {k: ray_shard for k in in_abs}
+
+    t0 = time.time()
+    jitted = jax.jit(model.render_step, in_shardings=(p_shard, in_shard),
+                     out_shardings=ray_shard)
+    lowered = jitted.lower(p_abs, in_abs)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    chips = int(np.prod(list(mesh.shape.values())))
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    p_per_net = param_count(decls) / 2
+    n_evals = n_rays * (ncfg.n_coarse + ncfg.n_coarse + ncfg.n_fine)
+    mf = 2.0 * p_per_net * n_evals
+    result = {
+        "arch": "nerf-icarus", "shape": shape_name, "optimized": optimized,
+        "mesh": dict(mesh.shape), "chips": chips,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_acc,
+        "collectives": coll,
+        "param_count": param_count(decls),
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / chips,
+        "roofline": {
+            "compute_s": flops / PEAK_FLOPS_BF16,
+            "memory_s": bytes_acc / HBM_BW,
+            "collective_s": coll["wire_bytes"] / ICI_BW,
+        },
+        "useful_flops_ratio": (mf / chips) / flops if flops else None,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    result["dominant"] = max(result["roofline"], key=result["roofline"].get)
+    if verbose:
+        print(json.dumps(result, indent=2))
+    return result
+
+
+# --------------------------------------------- trip-count-correct probes ---
+# XLA cost_analysis counts a while (lax.scan) body ONCE, not x trip count,
+# so the scanned production graphs under-report flops/bytes/collectives by
+# ~n_layers. We therefore compile two UNROLLED reduced-depth probes per cell
+# and linearly extrapolate per-layer costs to full depth — exact for the
+# homogeneous layer stacks every assigned arch has (MoE's leading dense
+# layer and the hybrid's tail live in the extrapolation intercept).
+def _probe_cfg(cfg, k: int):
+    """Unrolled config with k layer-units. Returns (cfg_k, units_k)."""
+    kw = dict(scan_layers=False)
+    if cfg.family == "moe":
+        fk = cfg.moe.first_k_dense
+        return cfg.replace(n_layers=fk + k, **kw), k
+    if cfg.family == "hybrid":
+        per = len(cfg.hybrid.pattern)
+        return cfg.replace(n_layers=k * per, **kw), k
+    if cfg.family == "encdec":
+        import dataclasses
+        e = dataclasses.replace(cfg.encdec, n_enc_layers=k)
+        return cfg.replace(n_layers=k, encdec=e, **kw), k
+    return cfg.replace(n_layers=k, **kw), k
+
+
+def _full_units(cfg) -> float:
+    if cfg.family == "moe":
+        return cfg.n_layers - cfg.moe.first_k_dense
+    if cfg.family == "hybrid":
+        return cfg.n_layers / len(cfg.hybrid.pattern)
+    return float(cfg.n_layers)
+
+
+def _extrapolate(f1: dict, f2: dict, k1: float, k2: float, kf: float) -> dict:
+    """Per-key linear extrapolation in layer-units."""
+    out = {}
+    for key in f1:
+        slope = (f2[key] - f1[key]) / (k2 - k1)
+        out[key] = max(0.0, f1[key] + (kf - k1) * slope)
+    return out
+
+
+def _cost_triple(compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "wire_bytes": float(coll["wire_bytes"])}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               rules: Rules | None = None, verbose: bool = True,
+               probes: bool = True, optimized: bool = False,
+               remat_policy: str | None = None,
+               param_dtype: str | None = None) -> dict:
+    if arch == "nerf-icarus":
+        return lower_nerf_cell(shape_name, multi_pod=multi_pod,
+                               verbose=verbose, optimized=optimized)
+    cfg = get_config(arch)
+    if remat_policy:
+        cfg = cfg.replace(remat_policy=remat_policy)
+    if param_dtype:
+        cfg = cfg.replace(param_dtype=param_dtype)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.supports_long:
+        return {"arch": arch, "shape": shape_name, "skipped":
+                "full-attention arch; long_500k requires sub-quadratic decode"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules or Rules()
+
+    compiled, t_lower, t_compile, state_bytes, decls = _compile_step(
+        cfg, shape, mesh, rules, optimized=optimized)
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {k: int(getattr(mem, k)) for k in
+                 ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes")
+                 if hasattr(mem, k)}
+    except Exception as e:  # pragma: no cover
+        mem_d = {"error": str(e)}
+    coll = collective_bytes(compiled.as_text())
+    scan_raw = _cost_triple(compiled)
+
+    # trip-count-correct totals from unrolled reduced-depth probes
+    probe_info = None
+    cost3 = scan_raw
+    if probes:
+        k1, k2 = (1, 2) if cfg.family == "hybrid" else (2, 4)
+        cfg1, u1 = _probe_cfg(cfg, k1)
+        cfg2, u2 = _probe_cfg(cfg, k2)
+        c1, *_ = _compile_step(cfg1, shape, mesh, rules, optimized=optimized)
+        c2, *_ = _compile_step(cfg2, shape, mesh, rules, optimized=optimized)
+        f1, f2 = _cost_triple(c1), _cost_triple(c2)
+        uf = _full_units(cfg)
+        cost3 = _extrapolate(f1, f2, u1, u2, uf)
+        probe_info = {"k": [u1, u2], "units_full": uf, "f1": f1, "f2": f2}
+
+    chips = int(np.prod(list(mesh.shape.values())))
+    flops = cost3["flops"]
+    bytes_acc = cost3["bytes"]
+    wire = cost3["wire_bytes"]
+    mf = model_flops(cfg, shape)
+    result = {
+        "arch": arch, "shape": shape_name, "optimized": optimized,
+        "mesh": dict(mesh.shape), "chips": chips,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_acc,
+        "collective_wire_bytes": wire,
+        "collectives": coll,
+        "scan_raw": scan_raw,
+        "probe": probe_info,
+        "memory_analysis": mem_d,
+        "param_bytes_per_device": sharded_bytes(decls, mesh, rules,
+                                                cfg.param_dtype),
+        "state_bytes_per_device": state_bytes,
+        "param_count": param_count(decls),
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / chips,
+        "roofline": {
+            "compute_s": flops / PEAK_FLOPS_BF16,
+            "memory_s": bytes_acc / HBM_BW,
+            "collective_s": wire / ICI_BW,
+        },
+        "useful_flops_ratio": (mf / chips) / flops if flops else None,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    r = result["roofline"]
+    result["dominant"] = max(r, key=r.get)
+    if verbose:
+        print(json.dumps(result, indent=2))
+    return result
+
+
+def _compile_step(cfg, shape, mesh, rules, optimized: bool = False):
+    """Build + jit + lower + compile one (cfg, shape) on a mesh. Returns
+    (compiled, t_lower, t_compile, state_bytes_per_device, decls).
+
+    optimized=True installs the activation-constraint context during
+    tracing (vocab-sharded logits + joint-mesh attention resharding — the
+    beyond-paper §Perf levers)."""
+    from repro.runtime.sharding import set_activation_context
+    set_activation_context(mesh if optimized else None, rules)
+    try:
+        return _compile_step_inner(cfg, shape, mesh, rules)
+    finally:
+        set_activation_context(None)
+
+
+def _compile_step_inner(cfg, shape, mesh, rules):
+    model = build_model(cfg)
+    decls = model.param_decls()
+    p_abs = abstract_params(decls, cfg.param_dtype)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           pspecs(decls, mesh, rules))
+    in_abs = model.input_specs(shape)
+    in_shard = sds_shardings(mesh, rules, in_abs, model.input_logical(shape))
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt_cfg = AdamConfig(moment_dtype=cfg.moment_dtype)
+        o_decls = opt_state_decls(decls, opt_cfg)
+        o_abs = abstract_params(o_decls, "float32")
+        o_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                               pspecs(o_decls, mesh, rules))
+        step = make_train_step(model, opt_cfg)
+        jitted = jax.jit(step,
+                         in_shardings=(p_shard, o_shard, in_shard),
+                         out_shardings=(p_shard, o_shard, None),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(p_abs, o_abs, in_abs)
+        state_bytes = sharded_bytes(o_decls, mesh, rules, "float32")
+    elif shape.kind == "prefill":
+        c_decls = model.cache_decls(shape.global_batch, shape.seq_len)
+        c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                               pspecs(c_decls, mesh, rules))
+        logits_shard = NamedSharding(
+            mesh, P(rules.resolve("batch", mesh, shape.global_batch),
+                    None, None))
+        jitted = jax.jit(model.prefill, in_shardings=(p_shard, in_shard),
+                         out_shardings=(c_shard, logits_shard))
+        lowered = jitted.lower(p_abs, in_abs)
+        state_bytes = sharded_bytes(c_decls, mesh, rules, "bfloat16")
+    else:  # decode
+        c_decls = model.cache_decls(shape.global_batch, shape.seq_len)
+        c_abs = abstract_params(c_decls, "bfloat16")
+        c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                               pspecs(c_decls, mesh, rules))
+        logits_shard = NamedSharding(
+            mesh, P(rules.resolve("batch", mesh, shape.global_batch),
+                    None, None))
+        jitted = jax.jit(model.decode,
+                         in_shardings=(p_shard, c_shard,
+                                       in_shard["token"], in_shard["pos"]),
+                         out_shardings=(c_shard, logits_shard),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(p_abs, c_abs, in_abs["token"], in_abs["pos"])
+        state_bytes = sharded_bytes(c_decls, mesh, rules, "bfloat16")
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    return compiled, t_lower, t_compile, state_bytes, decls
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"], default="off")
+    ap.add_argument("--remat-policy", default=None,
+                    choices=["nothing", "dots"])
+    ap.add_argument("--param-dtype", default=None,
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--opt", action="store_true",
+                    help="enable the beyond-paper activation-sharding "
+                         "optimizations (vocab-sharded logits, attention "
+                         "batch resharding)")
+    ap.add_argument("--out", default="runs/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    for a in archs:
+        if a == "nerf-icarus":
+            for s in ([args.shape] if args.shape else sorted(NERF_SHAPES)):
+                cells.append((a, s))
+            continue
+        cfg = get_config(a)
+        shapes = [s.name for s in cfg.shapes()] if (args.all or not args.shape) \
+            else [args.shape]
+        for s in shapes:
+            cells.append((a, s))
+    if args.all:
+        cells += [("nerf-icarus", s) for s in sorted(NERF_SHAPES)]
+
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for arch, shp in cells:
+        for mp in pods:
+            tag = f"{arch}_{shp}_{'2x16x16' if mp else '16x16'}"
+            try:
+                # probes (trip-count correction) only on the single-pod
+                # roofline pass; multi-pod is the compile/sharding proof
+                res = lower_cell(arch, shp, multi_pod=mp, verbose=False,
+                                 probes=not mp, optimized=args.opt,
+                                 remat_policy=args.remat_policy,
+                                 param_dtype=args.param_dtype)
+                (outdir / f"{tag}.json").write_text(json.dumps(res, indent=2))
+                dom = res.get("dominant", "-")
+                status = "SKIP" if "skipped" in res else "OK"
+                print(f"[{status}] {tag}  dominant={dom} "
+                      f"compile={res.get('compile_s', 0)}s", flush=True)
+            except Exception as e:
+                failures.append((tag, str(e)[:2000]))
+                print(f"[FAIL] {tag}: {str(e)[:500]}", flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed")
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

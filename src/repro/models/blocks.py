@@ -1,0 +1,202 @@
+"""Attention + FFN block param declarations and apply functions.
+
+Shared by every transformer-family model (dense, MoE, hybrid, enc-dec, VLM).
+Weights are declared 3D/4D at head granularity — e.g. wq is
+(L, d_model, n_heads, head_dim) with logical axes
+("layers","embed","qheads","headdim") — so the sharding rules can make the
+shard/replicate decision per *head* axis (GQA KV heads that do not divide the
+model axis degrade to replicated instead of splitting inside a head).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, attention, ffn_apply, rms_norm
+from repro.models.params import Decl
+
+
+# ------------------------------------------------------------ attention ----
+def attn_decls(cfg: ArchConfig, L: int, cross: bool = False) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    lead = (L,) if L else ()
+    ll = ("layers",) if L else ()
+    out = {
+        "wq": Decl(lead + (d, H, hd), ll + ("embed", "qheads", "headdim")),
+        "wk": Decl(lead + (d, K, hd), ll + ("embed", "kvheads", "headdim")),
+        "wv": Decl(lead + (d, K, hd), ll + ("embed", "kvheads", "headdim")),
+        "wo": Decl(lead + (H, hd, d), ll + ("qheads", "headdim", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        out["bq"] = Decl(lead + (H, hd), ll + ("qheads", "headdim"), init="zeros")
+        out["bk"] = Decl(lead + (K, hd), ll + ("kvheads", "headdim"), init="zeros")
+        out["bv"] = Decl(lead + (K, hd), ll + ("kvheads", "headdim"), init="zeros")
+    if cfg.qk_norm and not cross:
+        out["q_norm"] = Decl(lead + (hd,), ll + ("headdim",), init="zeros")
+        out["k_norm"] = Decl(lead + (hd,), ll + ("headdim",), init="zeros")
+    return out
+
+
+def qkv_project(cfg: ArchConfig, p: dict, x, pos):
+    """x: (B,S,d) -> q (B,S,H,hd), k/v (B,S,K,hd), rope applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def _batch_split_attention(fn, q, k, v):
+    """§Perf lever: when TP cannot split the heads (12/20/8-head archs vs
+    a 16-wide model axis) attention would be replicated across the model
+    axis. The residual stream is replicated over "model" (it is sharded
+    over the data axes only), so each model-column can process ITS slice
+    of the local batch for free - a local dynamic-slice in, one
+    all-gather of the output out. This beats a with_sharding_constraint
+    reshard, which XLA lowers to full all-gathers of q/k/v.
+
+    Requires (B / dp) % model == 0; caller guards."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.runtime.sharding import _ACT_CTX
+
+    mesh = _ACT_CTX["mesh"]
+    rules = _ACT_CTX["rules"]
+    dp = tuple(a for a in rules.dp_axes if a in mesh.shape)
+    M = mesh.shape["model"]
+    spec = P(dp, None, None, None)
+
+    def local(q, k, v):
+        m = jax.lax.axis_index("model")
+        per = q.shape[0] // M
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, m * per, per, 0)
+        o = fn(sl(q), sl(k), sl(v))
+        return jax.lax.all_gather(o, "model", axis=0, tiled=True)
+
+    return jax.shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
+                         out_specs=spec, check_vma=False)(q, k, v)
+
+
+def attn_apply(cfg: ArchConfig, p: dict, x, *, pos, kind="causal", window=0,
+               prefix_len=0):
+    """Full-sequence self attention (train / prefill). Returns (out, k, v)."""
+    from repro.runtime.sharding import (attn_batch_split_ok,
+                                        attn_needs_batch_reshard)
+    q, k, v = qkv_project(cfg, p, x, pos)
+    core = partial(attention, q_pos=pos, kind=kind, window=window,
+                   prefix_len=prefix_len, chunk=cfg.attn_chunk,
+                   softcap=cfg.logits_softcap)
+    if attn_needs_batch_reshard(cfg.n_heads) and \
+            attn_batch_split_ok(q.shape[0]):
+        o = _batch_split_attention(core, q, k, v)
+    else:
+        o = core(q, k, v)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), k, v
+
+
+def attn_decode(cfg: ArchConfig, p: dict, x, cache_k, cache_v, pos_scalar, *,
+                kind="causal", window=0, prefix_len=0, ring: bool = False):
+    """One-token decode. x: (B,1,d). cache_k/v: (B,Smax,K,hd).
+
+    ``ring=True`` treats the cache as a ring buffer of size Smax (local
+    attention) — slot = pos % Smax and positions are tracked explicitly.
+    Returns (out, new_cache_k, new_cache_v).
+    """
+    B, Smax = cache_k.shape[0], cache_k.shape[1]
+    rp = jnp.full((1,), pos_scalar, jnp.int32)
+    q, k, v = qkv_project(cfg, p, x, rp)
+    slot = (pos_scalar % Smax) if ring else pos_scalar
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                      (0, slot, 0, 0))
+    if ring:
+        idx = jnp.arange(Smax, dtype=jnp.int32)
+        # absolute position stored in each slot given current write at `slot`
+        kv_pos = pos_scalar - ((slot - idx) % Smax)
+        kv_valid = kv_pos >= 0
+    else:
+        kv_pos = jnp.arange(Smax, dtype=jnp.int32)
+        kv_valid = None  # causal mask handles the unwritten tail
+    o = attention(q, ck, cv, q_pos=rp, kv_pos=kv_pos, kv_valid=kv_valid,
+                  kind=kind, window=window, prefix_len=prefix_len,
+                  chunk=cfg.attn_chunk, softcap=cfg.logits_softcap)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), ck, cv
+
+
+# --------------------------------------------------------------- ffn -------
+def ffn_decls(cfg: ArchConfig, L: int, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    lead = (L,) if L else ()
+    ll = ("layers",) if L else ()
+    out = {
+        "w1": Decl(lead + (d, ff), ll + ("embed", "ffn")),
+        "w2": Decl(lead + (ff, d), ll + ("ffn", "embed")),
+    }
+    if cfg.ffn_kind in ("swiglu", "geglu"):
+        out["w3"] = Decl(lead + (d, ff), ll + ("embed", "ffn"))
+    return out
+
+
+def kv_cache_decls(cfg: ArchConfig, L: int, batch: int, capacity: int,
+                   dtype: str = "bfloat16") -> dict:
+    shape = (L, batch, capacity, cfg.n_kv_heads, cfg.head_dim)
+    logical = ("layers", "batch", "seq", "kvheads", "headdim_tp")
+    return {"k": Decl(shape, logical, init="zeros", dtype=dtype),
+            "v": Decl(shape, logical, init="zeros", dtype=dtype)}
+
+
+# -------------------------------------------------------------- norm -------
+def norm_decls(cfg: ArchConfig, L: int) -> dict:
+    lead = (L,) if L else ()
+    ll = ("layers",) if L else ()
+    out = {"w": Decl(lead + (cfg.d_model,), ll + ("embed",), init="zeros")}
+    if cfg.norm_kind == "layer":
+        out["w"] = Decl(lead + (cfg.d_model,), ll + ("embed",), init="ones")
+        out["b"] = Decl(lead + (cfg.d_model,), ll + ("embed",), init="zeros")
+    return out
+
+
+def norm_apply(cfg: ArchConfig, p: dict, x):
+    from repro.models.layers import layer_norm
+    if cfg.norm_kind == "layer":
+        return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["w"], cfg.norm_eps)
+
+
+# ------------------------------------------------------------- embed -------
+def embed_decls(cfg: ArchConfig) -> dict:
+    out = {"embed": Decl((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                         init="embed")}
+    if not cfg.tie_embeddings:
+        out["unembed"] = Decl((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    out["final_norm"] = norm_decls(cfg, 0)
+    return out
+
+
+def embed_tokens(params, tokens, dtype):
+    return params["embed"][tokens].astype(dtype)
+
+
+def logits_out(cfg: ArchConfig, params, x):
+    from repro.runtime.sharding import constrain_logical
+    if cfg.tie_embeddings:
+        out = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        out = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+    # §Perf lever: keep the (B,S,V) logits vocab-sharded over the model
+    # axis (they otherwise materialize near-replicated and dominate temp
+    # memory — 638 GB global for qwen2-1.5b train_4k). No-op without an
+    # installed activation context.
+    return constrain_logical(out, ("batch", None, "vocab"))

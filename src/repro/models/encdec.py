@@ -1,0 +1,184 @@
+"""whisper-large-v3 backbone — encoder-decoder transformer
+[arXiv:2212.04356]. LayerNorm (pre-LN), GELU FFN, learned absolute
+positions, tied output embedding.
+
+The conv audio frontend is a STUB per the assignment: ``input_specs``
+supplies precomputed (B, enc_seq, d_model) frame embeddings (log-mel ->
+2x conv downsample already applied). Everything downstream — 32-layer
+encoder, 32-layer decoder with cross-attention, caches — is real.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import blocks
+from repro.models.layers import attention, ffn_apply, softmax_xent, cast_tree
+from repro.models.params import Decl
+from repro.models.transformer import DenseLM, _maybe_remat, maybe_scan
+
+MAX_DEC_POS = 32768  # sized to the largest assigned decode shape
+
+
+class EncDecLM(DenseLM):
+    # ------------------------------------------------------------ decls ----
+    def param_decls(self) -> dict:
+        cfg = self.cfg
+        e = cfg.encdec
+        d = cfg.d_model
+        enc_layer = {
+            "attn_norm": blocks.norm_decls(cfg, e.n_enc_layers),
+            "attn": blocks.attn_decls(cfg, e.n_enc_layers),
+            "ffn_norm": blocks.norm_decls(cfg, e.n_enc_layers),
+            "ffn": blocks.ffn_decls(cfg, e.n_enc_layers),
+        }
+        dec_layer = {
+            "attn_norm": blocks.norm_decls(cfg, cfg.n_layers),
+            "attn": blocks.attn_decls(cfg, cfg.n_layers),
+            "cross_norm": blocks.norm_decls(cfg, cfg.n_layers),
+            "cross": blocks.attn_decls(cfg, cfg.n_layers, cross=True),
+            "ffn_norm": blocks.norm_decls(cfg, cfg.n_layers),
+            "ffn": blocks.ffn_decls(cfg, cfg.n_layers),
+        }
+        return {
+            **blocks.embed_decls(cfg),
+            "enc_pos": Decl((e.enc_seq, d), (None, "embed"), init="small"),
+            "dec_pos": Decl((MAX_DEC_POS, d), (None, "embed"), init="small"),
+            "enc_final_norm": blocks.norm_decls(cfg, 0),
+            "enc_layers": enc_layer,
+            "layers": dec_layer,
+        }
+
+    def cache_decls(self, batch: int, capacity: int) -> dict:
+        cfg = self.cfg
+        e = cfg.encdec
+        self_kv = blocks.kv_cache_decls(cfg, cfg.n_layers, batch, capacity)
+        cross = blocks.kv_cache_decls(cfg, cfg.n_layers, batch, e.enc_seq)
+        return {"k": self_kv["k"], "v": self_kv["v"],
+                "cross_k": cross["k"], "cross_v": cross["v"]}
+
+    # ------------------------------------------------------------ encoder --
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(cfg.dtype) + params["enc_pos"].astype(cfg.dtype)
+        lp_all = cast_tree(params["enc_layers"], cfg.dtype)
+        pos = jnp.arange(frames.shape[1], dtype=jnp.int32)
+
+        def body(x, lp):
+            h = blocks.norm_apply(cfg, lp["attn_norm"], x)
+            o, _, _ = blocks.attn_apply(cfg, lp["attn"], h, pos=pos, kind="full")
+            x = x + o
+            h = blocks.norm_apply(cfg, lp["ffn_norm"], x)
+            return x + ffn_apply(h, lp["ffn"], cfg.ffn_kind), None
+
+        body = _maybe_remat(body, cfg)
+        x, _ = maybe_scan(cfg, body, x, lp_all, collect=False)
+        return blocks.norm_apply(cfg, params["enc_final_norm"], x)
+
+    # ------------------------------------------------------------ decoder --
+    def _cross_apply(self, lp, x, enc_out):
+        cfg = self.cfg
+        q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["wv"])
+        o = attention(q, k, v, q_pos=jnp.arange(x.shape[1], dtype=jnp.int32),
+                      kind="full", chunk=cfg.attn_chunk)
+        return jnp.einsum("bshk,hkd->bsd", o, lp["wo"]), k, v
+
+    def _decoder(self, params, tokens, enc_out, pos0: int = 0,
+                 collect_kv: bool = False):
+        cfg = self.cfg
+        S = tokens.shape[1]
+        pos = jnp.arange(S, dtype=jnp.int32) + pos0
+        x = blocks.embed_tokens(params, tokens, cfg.dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], pos0, S, 0).astype(cfg.dtype)
+        lp_all = cast_tree(params["layers"], cfg.dtype)
+
+        def body(x, lp):
+            h = blocks.norm_apply(cfg, lp["attn_norm"], x)
+            o, k, v = blocks.attn_apply(cfg, lp["attn"], h, pos=pos)
+            x = x + o
+            h = blocks.norm_apply(cfg, lp["cross_norm"], x)
+            o, ck, cv = self._cross_apply(lp["cross"], h, enc_out)
+            x = x + o
+            h = blocks.norm_apply(cfg, lp["ffn_norm"], x)
+            x = x + ffn_apply(h, lp["ffn"], cfg.ffn_kind)
+            ys = None
+            if collect_kv:
+                ys = tuple(t.astype(jnp.bfloat16) for t in (k, v, ck, cv))
+            return x, ys
+
+        body = _maybe_remat(body, cfg)
+        x, ys = maybe_scan(cfg, body, x, lp_all, collect=collect_kv)
+        return blocks.norm_apply(cfg, params["final_norm"], x), ys
+
+    # --------------------------------------------------------------- api ---
+    def loss(self, params, batch):
+        enc_out = self.encode(params, batch["frames"])
+        x, _ = self._decoder(params, batch["tokens"], enc_out)
+        logits = blocks.logits_out(self.cfg, params, x)
+        return softmax_xent(logits, batch["labels"])
+
+    def prefill(self, params, batch, capacity=None):
+        from repro.models.transformer import _pad_cache_seq
+        enc_out = self.encode(params, batch["frames"])
+        x, ys = self._decoder(params, batch["tokens"], enc_out, collect_kv=True)
+        cache = {"k": ys[0], "v": ys[1]}
+        if capacity is not None:
+            cache = _pad_cache_seq(cache, capacity, axis=2)
+        cache.update({"cross_k": ys[2], "cross_v": ys[3]})
+        return cache, blocks.logits_out(self.cfg, params, x[:, -1:])
+
+    def decode(self, params, cache, token, pos):
+        cfg = self.cfg
+        x = blocks.embed_tokens(params, token, cfg.dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], pos, 1, 0).astype(cfg.dtype)
+        lp_all = cast_tree(params["layers"], cfg.dtype)
+
+        def body(x, xs):
+            lp, ck, cv, xk, xv = xs
+            h = blocks.norm_apply(cfg, lp["attn_norm"], x)
+            o, ck, cv = blocks.attn_decode(cfg, lp["attn"], h, ck, cv, pos)
+            x = x + o
+            h = blocks.norm_apply(cfg, lp["cross_norm"], x)
+            q = jnp.einsum("bsd,dhk->bshk", h, lp["cross"]["wq"])
+            o = attention(q, xk, xv, q_pos=jnp.zeros((1,), jnp.int32),
+                          kind="full", chunk=cfg.attn_chunk)
+            x = x + jnp.einsum("bshk,hkd->bsd", o, lp["cross"]["wo"])
+            h = blocks.norm_apply(cfg, lp["ffn_norm"], x)
+            x = x + ffn_apply(h, lp["ffn"], cfg.ffn_kind)
+            return x, (ck, cv)
+
+        x, (ck, cv) = maybe_scan(
+            cfg, body, x, (lp_all, cache["k"], cache["v"],
+                           cache["cross_k"], cache["cross_v"]))
+        x = blocks.norm_apply(cfg, params["final_norm"], x)
+        cache = {"k": ck, "v": cv,
+                 "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+        return cache, blocks.logits_out(cfg, params, x)
+
+    # ------------------------------------------------------- input specs ---
+    def input_specs(self, shape: ShapeSpec) -> dict:
+        cfg = self.cfg
+        e = cfg.encdec
+        B, S = shape.global_batch, shape.seq_len
+        i32, f32 = jnp.int32, jnp.float32
+        frames = jax.ShapeDtypeStruct((B, e.enc_seq, cfg.d_model), f32)
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32),
+                    "frames": frames}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "frames": frames}
+        return {"token": jax.ShapeDtypeStruct((B, 1), i32),
+                "pos": jax.ShapeDtypeStruct((), i32)}
+
+    def input_logical(self, shape: ShapeSpec) -> dict:
+        out = super().input_logical(shape)
+        if shape.kind in ("train", "prefill"):
+            out["frames"] = ("batch", None, None)
+        return out

@@ -1,0 +1,160 @@
+"""Shared transformer building blocks (pure JAX, functional).
+
+Attention is a chunked online-softmax implementation (flash-attention
+algebra expressed as a ``lax.scan`` over KV chunks) so that 32k-token
+prefill and 512k decode lower with O(seq * chunk) live memory instead of
+O(seq^2), on any backend. Masks: causal, local window (recurrentgemma),
+prefix-LM (paligemma), full (whisper encoder / cross-attention).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- norms ----
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(dt)
+
+
+# ----------------------------------------------------------------- rope ----
+def apply_rope(x, pos, theta: float):
+    """x: (..., S, H, D) with D even; pos: (S,) or (B, S) int32."""
+    if theta <= 0.0:
+        return x
+    d2 = x.shape[-1] // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(d2, dtype=jnp.float32) / d2)
+    ang = pos.astype(jnp.float32)[..., None] * freqs          # (..., S, D/2)
+    # broadcast over head axis: x is (..., S, H, D); ang (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :d2], x[..., d2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention ----
+def _mask(q_pos, kv_pos, kind: str, window: int, prefix_len: int):
+    """(Sq, C) boolean allowed-matrix from position vectors."""
+    q = q_pos[:, None]
+    k = kv_pos[None, :]
+    if kind == "causal":
+        m = k <= q
+    elif kind == "local":
+        m = (k <= q) & (q - k < window)
+    elif kind == "prefix":
+        m = (k <= q) | (k < prefix_len)
+    elif kind == "full":
+        m = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    else:
+        raise ValueError(kind)
+    return m
+
+
+def attention(q, k, v, *, q_pos, kv_pos=None, kv_valid=None, kind="causal",
+              window: int = 0, prefix_len: int = 0, chunk: int = 1024,
+              softcap: float = 0.0):
+    """Chunked online-softmax GQA attention.
+
+    q: (B, Sq, Hq, D);  k, v: (B, Skv, Hkv, D), Hq % Hkv == 0.
+    q_pos: (Sq,) int32 absolute positions; kv_pos: (Skv,) (default arange).
+    kv_valid: (Skv,) bool — False for ring-buffer/padded slots.
+    """
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qh = q.reshape(B, Sq, Hkv, G, D) * (D ** -0.5)
+    if kv_pos is None:
+        kv_pos = jnp.arange(Skv, dtype=jnp.int32)
+    if kv_valid is None:
+        kv_valid = jnp.ones((Skv,), bool)
+
+    # pad KV length to a chunk multiple
+    nc = max(1, -(-Skv // chunk))
+    pad = nc * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad))
+        kv_valid = jnp.pad(kv_valid, (0, pad))
+
+    ks = k.reshape(B, nc, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nc, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    ps = kv_pos.reshape(nc, chunk)
+    vals = kv_valid.reshape(nc, chunk)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kc, vc, pc, valc = inp
+        logits = jnp.einsum("bskgd,bckd->bskgc", qh, kc,
+                            preferred_element_type=jnp.float32)
+        if softcap > 0.0:
+            logits = softcap * jnp.tanh(logits / softcap)
+        allowed = _mask(q_pos, pc, kind, window, prefix_len) & valc[None, :]
+        logits = jnp.where(allowed[None, :, None, None, :], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bskgc,bckd->bskgd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+    if nc == 1:
+        (m, l, acc), _ = step((m0, l0, a0), (ks[0], vs[0], ps[0], vals[0]))
+    else:
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (ks, vs, ps, vals))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------- ffn ------
+def ffn_apply(x, p, kind: str):
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else (lambda t: jax.nn.gelu(t, approximate=True))
+        h = act(x @ p["w1"]) * (x @ p["w3"])
+        return h @ p["w2"]
+    if kind == "gelu":
+        return jax.nn.gelu(x @ p["w1"], approximate=True) @ p["w2"]
+    if kind == "relu2":
+        return jnp.square(jax.nn.relu(x @ p["w1"])) @ p["w2"]
+    raise ValueError(kind)
+
+
+def cast_tree(tree, dtype):
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda a: a.astype(dt) if jnp.issubdtype(a.dtype, jnp.floating) else a, tree)
+
+
+# ------------------------------------------------------ cross entropy ------
+def softmax_xent(logits, labels, valid=None):
+    """Mean next-token cross entropy. logits (B,S,V) any float; labels (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if valid is None:
+        return nll.mean()
+    w = valid.astype(jnp.float32)
+    return (nll * w).sum() / jnp.maximum(w.sum(), 1.0)

@@ -1,0 +1,34 @@
+"""Unified model construction: ``build_model(cfg)`` returns a model object
+with the common API used by the launcher, dry-run, tests and benchmarks:
+
+    param_decls() / cache_decls(batch, capacity)   -> Decl trees
+    loss(params, batch)                            -> scalar
+    prefill(params, batch)                         -> (cache, last_logits)
+    decode(params, cache, token, pos)              -> (cache, logits)
+    input_specs(shape) / input_logical(shape)      -> dry-run stand-ins
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+from repro.models.encdec import EncDecLM
+from repro.models.moe import MoELM
+from repro.models.rglru import RecurrentLM
+from repro.models.ssm import MambaLM
+from repro.models.transformer import DenseLM, VLM
+
+_FAMILIES = {
+    "dense": DenseLM,
+    "moe": MoELM,
+    "ssm": MambaLM,
+    "hybrid": RecurrentLM,
+    "encdec": EncDecLM,
+    "vlm": VLM,
+}
+
+
+def build_model(cfg: ArchConfig):
+    try:
+        cls = _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r} for arch {cfg.name!r}")
+    return cls(cfg)

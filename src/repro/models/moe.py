@@ -1,0 +1,351 @@
+"""Token-choice top-k MoE (moonshot 64e/top-6, kimi-k2 384e/top-8).
+
+Dispatch is sort-based with static capacity so compiled FLOPs reflect the
+*active* compute (E x C x d x ff with E*C ~= k*T*capacity_factor), not a
+dense all-experts product — this keeps the roofline honest. Experts are
+expert-parallel over the "model" mesh axis (GSPMD turns the gather/scatter
+into the dispatch collectives; §Perf iterates on them).
+
+DeepSeek-V3-style extras used by both assigned MoE archs: leading dense
+layer(s) and always-on shared expert(s).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks
+from repro.models.layers import ffn_apply, softmax_xent, cast_tree
+from repro.models.params import Decl
+from repro.models.transformer import DenseLM, _maybe_remat, maybe_scan
+
+
+def expert_ffn_decls(cfg: ArchConfig, L: int) -> dict:
+    m = cfg.moe
+    d, ff, E = cfg.d_model, m.d_ff_expert, m.n_experts
+    lead = (L,) if L else ()
+    ll = ("layers",) if L else ()
+    out = {
+        "w1": Decl(lead + (E, d, ff), ll + ("experts", "embed", "ffn")),
+        "w2": Decl(lead + (E, ff, d), ll + ("experts", "ffn", "embed")),
+    }
+    if cfg.ffn_kind in ("swiglu", "geglu"):
+        out["w3"] = Decl(lead + (E, d, ff), ll + ("experts", "embed", "ffn"))
+    return out
+
+
+def capacity(cfg: ArchConfig, n_tokens: int) -> int:
+    m = cfg.moe
+    c = int(m.experts_per_token * n_tokens * m.capacity_factor / m.n_experts)
+    return max(8, -(-c // 8) * 8)  # >=8, rounded up to a multiple of 8
+
+
+def moe_apply(cfg: ArchConfig, p: dict, x):
+    """x: (B, S, d) -> (y, aux_loss). p: router + experts (+ shared).
+
+    With an activation context installed (launch-time §Perf lever) and
+    E % model == 0, routes through the explicit shard_map EP path -
+    local dispatch + psum - instead of the GSPMD sort/scatter lowering
+    (which all-gathers the (E*C, d) dispatch buffers: ~230 GB/layer for
+    kimi-k2 train_4k)."""
+    from repro.runtime.sharding import _ACT_CTX
+    mesh = _ACT_CTX["mesh"]
+    if mesh is not None and mesh.shape.get("model", 1) > 1 \
+            and cfg.moe.n_experts % mesh.shape["model"] == 0:
+        return _moe_apply_ep(cfg, p, x, mesh, _ACT_CTX["rules"])
+    return _moe_apply_dense(cfg, p, x)
+
+
+def _dispatch_compute_combine(cfg: ArchConfig, xf, probs, w1, w2, w3,
+                              e_base: int, n_local: int, capacity_rows: int):
+    """Sort-based dispatch restricted to experts [e_base, e_base+n_local),
+    grouped-einsum compute, weighted combine. xf: (T, d). Returns (T, d)
+    partial output (zeros for tokens routed elsewhere)."""
+    m = cfg.moe
+    T, d = xf.shape
+    k = m.experts_per_token
+    gate, expert_ids = jax.lax.top_k(probs, k)                  # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = expert_ids.reshape(-1)
+    local_e = flat_e - e_base
+    mine = (local_e >= 0) & (local_e < n_local)
+    sort_key = jnp.where(mine, local_e, n_local)                # strangers last
+    order = jnp.argsort(sort_key)
+    sorted_e = sort_key[order]
+    token_idx = order // k
+    first = jnp.searchsorted(sorted_e, jnp.arange(n_local, dtype=sorted_e.dtype))
+    seg_pos = jnp.arange(T * k) - first[jnp.minimum(sorted_e, n_local - 1)]
+    keep = (sorted_e < n_local) & (seg_pos < capacity_rows)
+    dest = jnp.where(keep, sorted_e * capacity_rows + seg_pos,
+                     n_local * capacity_rows)
+
+    buf = jnp.zeros((n_local * capacity_rows + 1, d), xf.dtype
+                    ).at[dest].set(xf[token_idx])
+    buf = buf[:-1].reshape(n_local, capacity_rows, d)
+
+    if w3 is not None:
+        act = jax.nn.silu if cfg.ffn_kind == "swiglu" else (
+            lambda t: jax.nn.gelu(t, approximate=True))
+        h = act(jnp.einsum("ecd,edf->ecf", buf, w1)) \
+            * jnp.einsum("ecd,edf->ecf", buf, w3)
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, w1), approximate=True)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w2
+                         ).reshape(n_local * capacity_rows, d)
+
+    contrib = jnp.where(keep[:, None],
+                        out_buf[jnp.minimum(dest, n_local * capacity_rows - 1)],
+                        0.0)
+    contrib = contrib * gate.reshape(-1)[order][:, None].astype(xf.dtype)
+    return jnp.zeros((T, d), xf.dtype).at[token_idx].add(contrib)
+
+
+def _moe_apply_ep(cfg: ArchConfig, p: dict, x, mesh, rules):
+    """Explicit expert-parallel MoE (beyond-paper §Perf path).
+
+    The residual stream is replicated over the "model" axis, experts are
+    sharded over it. Each model column dispatches ITS expert group's
+    tokens locally (no dispatch communication at all), computes its local
+    experts, and the partial outputs are psum'd over "model" - per layer
+    wire = one all-reduce of (T_local, d) + the FSDP weight gathers,
+    instead of GSPMD's all-gathered (E*C, d) scatter buffers."""
+    from jax.sharding import PartitionSpec as P
+
+    m = cfg.moe
+    B, S, d = x.shape
+    M = mesh.shape["model"]
+    E_loc = m.n_experts // M
+    dp = tuple(a for a in rules.dp_axes if a in mesh.shape)
+    dpn = int(np.prod([mesh.shape[a] for a in dp]))
+    T_loc = (B // dpn) * S
+    cap_rows = max(8, -(- int(m.experts_per_token * T_loc
+                              * m.capacity_factor / m.n_experts) // 8) * 8)
+
+    has_w3 = "w3" in p["experts"]
+    fs = "data" if ("data" in mesh.shape and d % mesh.shape["data"] == 0
+                    and rules.fsdp) else None
+    w1_spec = P("model", fs, None)
+    w2_spec = P("model", None, fs)
+    r_spec = P(fs, "model")
+
+    def local(xb, router, w1, w2, w3):
+        # gather the FSDP'd weight shards (explicit ZeRO-3 gather)
+        if fs:
+            router = jax.lax.all_gather(router, fs, axis=0, tiled=True)
+            w1 = jax.lax.all_gather(w1, fs, axis=1, tiled=True)
+            w2 = jax.lax.all_gather(w2, fs, axis=2, tiled=True)
+            if w3 is not None:
+                w3 = jax.lax.all_gather(w3, fs, axis=1, tiled=True)
+        router = jax.lax.all_gather(router, "model", axis=1, tiled=True)
+        e_base = jax.lax.axis_index("model") * E_loc
+        xf = xb.reshape(-1, d)
+        probs = jax.nn.softmax(
+            (xf.astype(jnp.float32) @ router.astype(jnp.float32)), axis=-1)
+        y = _dispatch_compute_combine(cfg, xf, probs, w1, w2, w3,
+                                      e_base, E_loc, cap_rows)
+        y = jax.lax.psum(y, "model")
+        # Switch aux from the full router distribution (replicated math)
+        gate, ids = jax.lax.top_k(probs, m.experts_per_token)
+        me = probs.mean(0)
+        ce = jax.nn.one_hot(ids[:, 0], m.n_experts, dtype=jnp.float32).mean(0)
+        aux = m.n_experts * jnp.sum(me * ce)
+        return y.reshape(xb.shape), aux
+
+    x_spec = P(dp, None, None)
+    w3_arg = p["experts"].get("w3")
+    y, aux = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(x_spec, r_spec, w1_spec, w2_spec,
+                  w1_spec if has_w3 else P()),
+        out_specs=(x_spec, P()),
+        check_vma=False)(x, p["router"], p["experts"]["w1"],
+                         p["experts"]["w2"],
+                         w3_arg if has_w3 else jnp.zeros((), x.dtype))
+    if "shared" in p:
+        y = y + ffn_apply(x, p["shared"], cfg.ffn_kind)
+    return y, aux
+
+
+def _moe_apply_dense(cfg: ArchConfig, p: dict, x):
+    """GSPMD path: sort-based dispatch with static capacity."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    k = m.experts_per_token
+    E = m.n_experts
+    C = capacity(cfg, T)
+
+    xf = x.reshape(T, d)
+    router_logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(router_logits, axis=-1)              # (T, E)
+    gate, expert_ids = jax.lax.top_k(probs, k)                  # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch ------------------------------------------
+    flat_e = expert_ids.reshape(-1)                             # (T*k,)
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    token_idx = order // k
+    first = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=sorted_e.dtype))
+    seg_pos = jnp.arange(T * k) - first[sorted_e]
+    keep = seg_pos < C
+    dest = jnp.where(keep, sorted_e * C + seg_pos, E * C)       # E*C = drop slot
+
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[dest].set(xf[token_idx])
+    buf = buf[:-1].reshape(E, C, d)
+
+    # ---- expert compute (grouped einsum; E sharded over "model") ------
+    if "w3" in p["experts"]:
+        act = jax.nn.silu if cfg.ffn_kind == "swiglu" else (
+            lambda t: jax.nn.gelu(t, approximate=True))
+        h = act(jnp.einsum("ecd,edf->ecf", buf, p["experts"]["w1"])) \
+            * jnp.einsum("ecd,edf->ecf", buf, p["experts"]["w3"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["experts"]["w1"]),
+                        approximate=True)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["experts"]["w2"]).reshape(E * C, d)
+
+    # ---- combine -------------------------------------------------------
+    contrib = jnp.where(keep[:, None], out_buf[jnp.minimum(dest, E * C - 1)], 0.0)
+    contrib = contrib * gate.reshape(-1)[order][:, None].astype(x.dtype)
+    yf = jnp.zeros((T, d), x.dtype).at[token_idx].add(contrib)
+    y = yf.reshape(B, S, d)
+
+    if "shared" in p:
+        y = y + ffn_apply(x, p["shared"], cfg.ffn_kind)
+
+    # ---- load-balance aux (Switch): E * sum_i f_i * p_i ----------------
+    me = probs.mean(0)                                          # (E,)
+    one_hot_top1 = jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32)
+    ce = one_hot_top1.mean(0)
+    aux = E * jnp.sum(me * ce)
+    return y, aux
+
+
+class MoELM(DenseLM):
+    """Dense attention + MoE FFN; leading ``first_k_dense`` layers dense."""
+
+    def moe_layer_decls(self, L: int) -> dict:
+        cfg = self.cfg
+        m = cfg.moe
+        out = {
+            "attn_norm": blocks.norm_decls(cfg, L),
+            "attn": blocks.attn_decls(cfg, L),
+            "ffn_norm": blocks.norm_decls(cfg, L),
+            "router": Decl(((L,) if L else ()) + (cfg.d_model, m.n_experts),
+                           (("layers",) if L else ()) + ("embed", "experts")),
+            "experts": expert_ffn_decls(cfg, L),
+        }
+        if m.n_shared_experts:
+            shared_cfg = cfg.replace(d_ff=m.n_shared_experts * m.d_ff_expert)
+            out["shared"] = blocks.ffn_decls(shared_cfg, L)
+        return out
+
+    def param_decls(self) -> dict:
+        cfg = self.cfg
+        m = cfg.moe
+        n_moe = cfg.n_layers - m.first_k_dense
+        out = {**blocks.embed_decls(cfg), "layers": self.moe_layer_decls(n_moe)}
+        if m.first_k_dense:
+            dense_cfg = cfg.replace(d_ff=m.d_ff_dense or cfg.d_ff)
+            out["dense_layers"] = {
+                "attn_norm": blocks.norm_decls(cfg, m.first_k_dense),
+                "attn": blocks.attn_decls(cfg, m.first_k_dense),
+                "ffn_norm": blocks.norm_decls(cfg, m.first_k_dense),
+                "ffn": blocks.ffn_decls(dense_cfg, m.first_k_dense),
+            }
+        return out
+
+    # -------------------------------------------------------------- fwd ----
+    def _moe_layer_fwd(self, carry, lp, pos, collect_kv):
+        cfg = self.cfg
+        x, aux = carry
+        h = blocks.norm_apply(cfg, lp["attn_norm"], x)
+        o, k, v = blocks.attn_apply(cfg, lp["attn"], h, pos=pos)
+        x = x + o
+        h = blocks.norm_apply(cfg, lp["ffn_norm"], x)
+        y, a = moe_apply(cfg, lp, h)
+        ys = (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)) if collect_kv else None
+        return (x + y, aux + a), ys
+
+    def backbone(self, params, x, pos, collect_kv: bool = False):
+        cfg = self.cfg
+        m = cfg.moe
+        kv_dense = None
+        if m.first_k_dense:
+            dl = cast_tree(params["dense_layers"], cfg.dtype)
+            kvs = []
+            for i in range(m.first_k_dense):
+                lp = jax.tree.map(lambda a: a[i], dl)
+                x, ys = self._layer_fwd(x, lp, pos, collect_kv)
+                kvs.append(ys)
+            if collect_kv:
+                kv_dense = jax.tree.map(lambda *a: jnp.stack(a), *kvs)
+
+        lp_all = cast_tree(params["layers"], cfg.dtype)
+
+        def body(carry, lp):
+            return self._moe_layer_fwd(carry, lp, pos, collect_kv)
+
+        body = _maybe_remat(body, cfg)
+        (x, aux), kv = maybe_scan(cfg, body, (x, jnp.zeros((), jnp.float32)),
+                                  lp_all, collect=collect_kv)
+        if collect_kv:
+            kv = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0), kv_dense, kv) \
+                if kv_dense is not None else kv
+        x = blocks.norm_apply(cfg, params["final_norm"], x)
+        self._last_aux = aux
+        return x, kv
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x, pos, _ = self.embed_inputs(params, batch)
+        x, _ = self.backbone(params, x, pos)
+        logits = blocks.logits_out(cfg, params, x)
+        return softmax_xent(logits, batch["labels"]) + \
+            cfg.moe.router_aux_weight * self._last_aux
+
+    # ------------------------------------------------------------ decode ---
+    def decode(self, params, cache, token, pos):
+        cfg = self.cfg
+        m = cfg.moe
+        x = blocks.embed_tokens(params, token, cfg.dtype)
+        nd = m.first_k_dense
+
+        def dense_body(x, xs):
+            lp, ck, cv = xs
+            h = blocks.norm_apply(cfg, lp["attn_norm"], x)
+            o, ck, cv = blocks.attn_decode(cfg, lp["attn"], h, ck, cv, pos)
+            x = x + o
+            h = blocks.norm_apply(cfg, lp["ffn_norm"], x)
+            return x + ffn_apply(h, lp["ffn"], cfg.ffn_kind), (ck, cv)
+
+        def moe_body(x, xs):
+            lp, ck, cv = xs
+            h = blocks.norm_apply(cfg, lp["attn_norm"], x)
+            o, ck, cv = blocks.attn_decode(cfg, lp["attn"], h, ck, cv, pos)
+            x = x + o
+            h = blocks.norm_apply(cfg, lp["ffn_norm"], x)
+            y, _ = moe_apply(cfg, lp, h)
+            return x + y, (ck, cv)
+
+        cks, cvs = [], []
+        if nd:
+            dl = cast_tree(params["dense_layers"], cfg.dtype)
+            for i in range(nd):
+                xs = jax.tree.map(lambda a: a[i],
+                                  (dl, cache["k"][:nd], cache["v"][:nd]))
+                x, (k1, v1) = dense_body(x, xs)
+                cks.append(k1), cvs.append(v1)
+
+        lp_all = cast_tree(params["layers"], cfg.dtype)
+        x, (ck, cv) = maybe_scan(cfg, moe_body, x,
+                                 (lp_all, cache["k"][nd:], cache["v"][nd:]))
+        if nd:
+            ck = jnp.concatenate([jnp.stack(cks), ck], 0)
+            cv = jnp.concatenate([jnp.stack(cvs), cv], 0)
+        x = blocks.norm_apply(cfg, params["final_norm"], x)
+        return {"k": ck, "v": cv}, blocks.logits_out(cfg, params, x)

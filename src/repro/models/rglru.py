@@ -1,0 +1,300 @@
+"""recurrentgemma — Griffin-style hybrid: RG-LRU recurrent blocks + local
+sliding-window MQA attention in a (rec, rec, attn) pattern [arXiv:2402.19427].
+
+The linear recurrence h_t = a_t*h_{t-1} + b_t runs as ``associative_scan``
+(log-depth) for train/prefill and O(1) state for decode; the attention cache
+is a window-sized ring buffer. Decode state is bounded => long_500k runs.
+
+Simplification vs. the released model (recorded in DESIGN.md): the RG-LRU
+recurrence/input gates use diagonal (per-channel) weights rather than
+block-diagonal linear maps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import blocks
+from repro.models.layers import ffn_apply, softmax_xent, cast_tree
+from repro.models.params import Decl
+from repro.models.ssm import _causal_conv, _conv_step
+from repro.models.transformer import DenseLM, _maybe_remat, maybe_scan
+
+_C = 8.0  # RG-LRU temperature
+
+
+def _lru_scan(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t over axis 1. a,b: (B,S,W) fp32."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def comb(l, r):
+        return (l[0] * r[0], l[1] * r[0] + r[1])
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return h
+
+
+class RecurrentLM(DenseLM):
+    def __init__(self, cfg: ArchConfig):
+        super().__init__(cfg)
+        h = cfg.hybrid
+        self.w = h.lru_width or cfg.d_model
+        self.pattern = h.pattern
+        per = len(h.pattern)
+        self.n_groups_scan = cfg.n_layers // per
+        self.tail_kinds = tuple(h.pattern[i % per]
+                                for i in range(self.n_groups_scan * per, cfg.n_layers))
+        self.n_rec = sum(1 for i in range(cfg.n_layers)
+                         if h.pattern[i % per] == "rec")
+        self.n_attn = cfg.n_layers - self.n_rec
+
+    # ------------------------------------------------------------ decls ----
+    def _rec_decls(self, L: int) -> dict:
+        cfg = self.cfg
+        d, w = cfg.d_model, self.w
+        cw = cfg.hybrid.conv_width
+        lead = (L,) if L else ()
+        ll = ("layers",) if L else ()
+        return {
+            "norm": blocks.norm_decls(cfg, L),
+            "w_gate": Decl(lead + (d, w), ll + ("embed", "lru")),
+            "w_x": Decl(lead + (d, w), ll + ("embed", "lru")),
+            "w_out": Decl(lead + (w, d), ll + ("lru", "embed")),
+            "conv": Decl(lead + (cw, w), ll + (None, "lru"), init="small"),
+            "lam": Decl(lead + (w,), ll + ("lru",), init="small"),
+            "wa": Decl(lead + (w,), ll + ("lru",), init="small"),
+            "ba": Decl(lead + (w,), ll + ("lru",), init="zeros"),
+            "wi": Decl(lead + (w,), ll + ("lru",), init="small"),
+            "bi": Decl(lead + (w,), ll + ("lru",), init="zeros"),
+        }
+
+    def _attn_decls(self, L: int) -> dict:
+        cfg = self.cfg
+        return {"norm": blocks.norm_decls(cfg, L),
+                "attn": blocks.attn_decls(cfg, L)}
+
+    def _ffn_decls(self, L: int) -> dict:
+        cfg = self.cfg
+        return {"norm": blocks.norm_decls(cfg, L),
+                "ffn": blocks.ffn_decls(cfg, L)}
+
+    def param_decls(self) -> dict:
+        G = self.n_groups_scan
+        group = {}
+        for j, kind in enumerate(self.pattern):
+            mix = self._rec_decls(G) if kind == "rec" else self._attn_decls(G)
+            group[f"mix{j}"] = mix
+            group[f"ffn{j}"] = self._ffn_decls(G)
+        tail = {}
+        for j, kind in enumerate(self.tail_kinds):
+            tail[f"mix{j}"] = self._rec_decls(0) if kind == "rec" \
+                else self._attn_decls(0)
+            tail[f"ffn{j}"] = self._ffn_decls(0)
+        out = {**blocks.embed_decls(self.cfg), "groups": group}
+        if tail:
+            out["tail"] = tail
+        return out
+
+    def cache_decls(self, batch: int, capacity: int) -> dict:
+        cfg = self.cfg
+        W = cfg.hybrid.window
+        cw = cfg.hybrid.conv_width
+        cap = W  # ring buffer: always window-sized (prefill emits this)
+        return {
+            "k": Decl((self.n_attn, batch, cap, cfg.n_kv_heads, cfg.head_dim),
+                      ("layers", "batch", "seq", "kvheads", "headdim_tp"),
+                      init="zeros", dtype="bfloat16"),
+            "v": Decl((self.n_attn, batch, cap, cfg.n_kv_heads, cfg.head_dim),
+                      ("layers", "batch", "seq", "kvheads", "headdim_tp"),
+                      init="zeros", dtype="bfloat16"),
+            "h": Decl((self.n_rec, batch, self.w),
+                      ("layers", "batch", "lru"), init="zeros", dtype="float32"),
+            "conv": Decl((self.n_rec, batch, cw - 1, self.w),
+                         ("layers", "batch", None, "lru"),
+                         init="zeros", dtype="float32"),
+        }
+
+    # ----------------------------------------------------------- blocks ----
+    def _rec_fwd(self, lp, x, h0=None):
+        """Full-sequence recurrent block. Returns (out, h_last, conv_tail)."""
+        cfg = self.cfg
+        h = blocks.norm_apply(cfg, lp["norm"], x)
+        gate = jax.nn.gelu(h @ lp["w_gate"], approximate=True)
+        u_raw = h @ lp["w_x"]
+        u = _causal_conv(u_raw.astype(jnp.float32), lp["conv"].astype(jnp.float32))
+        r = jax.nn.sigmoid(u * lp["wa"] + lp["ba"])
+        i = jax.nn.sigmoid(u * lp["wi"] + lp["bi"])
+        log_a = -_C * jax.nn.softplus(lp["lam"].astype(jnp.float32)) * r
+        a = jnp.exp(log_a)
+        b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u)
+        hs = _lru_scan(a, b, h0)
+        y = (gate * hs.astype(gate.dtype)) @ lp["w_out"]
+        cw = cfg.hybrid.conv_width
+        return x + y, hs[:, -1], u_raw[:, -(cw - 1):].astype(jnp.float32)
+
+    def _rec_step(self, lp, x, h_prev, ring):
+        """One-token recurrent block. x: (B,1,d)."""
+        cfg = self.cfg
+        h = blocks.norm_apply(cfg, lp["norm"], x)
+        gate = jax.nn.gelu(h @ lp["w_gate"], approximate=True)
+        u_raw = (h @ lp["w_x"]).astype(jnp.float32)
+        ring, u = _conv_step(ring, u_raw, lp["conv"].astype(jnp.float32))
+        u = u[:, 0]
+        r = jax.nn.sigmoid(u * lp["wa"] + lp["ba"])
+        i = jax.nn.sigmoid(u * lp["wi"] + lp["bi"])
+        a = jnp.exp(-_C * jax.nn.softplus(lp["lam"].astype(jnp.float32)) * r)
+        h_new = a * h_prev + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u)
+        y = (gate * h_new[:, None].astype(gate.dtype)) @ lp["w_out"]
+        return x + y, h_new, ring
+
+    def _attn_fwd(self, lp, x, pos):
+        cfg = self.cfg
+        h = blocks.norm_apply(cfg, lp["norm"], x)
+        o, k, v = blocks.attn_apply(cfg, lp["attn"], h, pos=pos, kind="local",
+                                    window=cfg.hybrid.window)
+        return x + o, k, v
+
+    def _ffn_fwd(self, lp, x):
+        cfg = self.cfg
+        h = blocks.norm_apply(cfg, lp["norm"], x)
+        return x + ffn_apply(h, lp["ffn"], cfg.ffn_kind)
+
+    # ------------------------------------------------------------- stack ---
+    def backbone(self, params, x, pos, collect_kv: bool = False):
+        cfg = self.cfg
+        W = cfg.hybrid.window
+        gp_all = cast_tree(params["groups"], cfg.dtype)
+
+        def to_ring(t):
+            """Linear (B,S,...) -> ring layout (B,W,...): position p at slot
+            p % W, zeros in never-written slots — exactly the layout
+            attn_decode(ring=True) assumes, so decode continues seamlessly."""
+            B, S = t.shape[:2]
+            L = min(S, W)
+            ring = jnp.zeros((B, W) + t.shape[2:], jnp.bfloat16)
+            slots = jnp.arange(S - L, S) % W
+            return ring.at[:, slots].set(t[:, -L:].astype(jnp.bfloat16))
+
+        def body(x, gp):
+            recs, attns = [], []
+            for j, kind in enumerate(self.pattern):
+                lp = gp[f"mix{j}"]
+                if kind == "rec":
+                    x, h_last, tail = self._rec_fwd(lp, x)
+                    recs.append((h_last, tail))
+                else:
+                    x, k, v = self._attn_fwd(lp, x, pos)
+                    attns.append((to_ring(k), to_ring(v)))
+                x = self._ffn_fwd(gp[f"ffn{j}"], x)
+            ys = None
+            if collect_kv:
+                rec_ys = jax.tree.map(lambda *a: jnp.stack(a), *recs)
+                att_ys = jax.tree.map(lambda *a: jnp.stack(a), *attns) \
+                    if attns else None
+                ys = (rec_ys, att_ys)
+            return x, ys
+
+        body = _maybe_remat(body, cfg)
+        x, ys = maybe_scan(cfg, body, x, gp_all, collect=collect_kv)
+
+        tails = []
+        if "tail" in params:
+            tp_all = cast_tree(params["tail"], cfg.dtype)
+            for j, kind in enumerate(self.tail_kinds):
+                lp = tp_all[f"mix{j}"]
+                if kind == "rec":
+                    x, h_last, tail = self._rec_fwd(lp, x)
+                    tails.append((h_last, tail))
+                else:
+                    x, k, v = self._attn_fwd(lp, x, pos)
+                x = self._ffn_fwd(tp_all[f"ffn{j}"], x)
+
+        x = blocks.norm_apply(cfg, params["final_norm"], x)
+        if not collect_kv:
+            return x, None
+
+        # assemble cache: scan ys have shape (G, per_group, ...) -> flatten
+        (h_g, conv_g), att = ys
+        hs = h_g.reshape((-1,) + h_g.shape[2:])
+        convs = conv_g.reshape((-1,) + conv_g.shape[2:])
+        if tails:
+            th = jnp.stack([t[0] for t in tails])
+            tc = jnp.stack([t[1] for t in tails])
+            hs = jnp.concatenate([hs, th], 0)
+            convs = jnp.concatenate([convs, tc], 0)
+        ks = att[0].reshape((-1,) + att[0].shape[2:])
+        vs = att[1].reshape((-1,) + att[1].shape[2:])
+        return x, {"k": ks, "v": vs, "h": hs, "conv": convs}
+
+    def prefill(self, params, batch, capacity=None):
+        """capacity ignored: KV is a window-sized ring; rec state is O(1)."""
+        cfg = self.cfg
+        x, pos, _ = self.embed_inputs(params, batch)
+        x, cache = self.backbone(params, x, pos, collect_kv=True)
+        return cache, blocks.logits_out(cfg, params, x[:, -1:])
+
+    def decode(self, params, cache, token, pos):
+        cfg = self.cfg
+        x = blocks.embed_tokens(params, token, cfg.dtype)
+        gp_all = cast_tree(params["groups"], cfg.dtype)
+        W = cfg.hybrid.window
+        per = len(self.pattern)
+        rec_per = sum(1 for k in self.pattern if k == "rec")
+        att_per = per - rec_per
+
+        def body(x, xs):
+            gp, hs, convs, ks, vs = xs     # per-group cache slices
+            ri = ai = 0
+            h_out, c_out, k_out, v_out = [], [], [], []
+            for j, kind in enumerate(self.pattern):
+                lp = gp[f"mix{j}"]
+                if kind == "rec":
+                    x, h_new, ring = self._rec_step(lp, x, hs[ri], convs[ri])
+                    h_out.append(h_new), c_out.append(ring)
+                    ri += 1
+                else:
+                    hn = blocks.norm_apply(cfg, lp["norm"], x)
+                    o, ck, cv = blocks.attn_decode(
+                        cfg, lp["attn"], hn, ks[ai], vs[ai], pos,
+                        kind="local", window=W, ring=True)
+                    x = x + o
+                    k_out.append(ck), v_out.append(cv)
+                    ai += 1
+                x = self._ffn_fwd(gp[f"ffn{j}"], x)
+            return x, (jnp.stack(h_out), jnp.stack(c_out),
+                       jnp.stack(k_out), jnp.stack(v_out))
+
+        G = self.n_groups_scan
+        rec_g = cache["h"][:G * rec_per].reshape((G, rec_per) + cache["h"].shape[1:])
+        conv_g = cache["conv"][:G * rec_per].reshape(
+            (G, rec_per) + cache["conv"].shape[1:])
+        k_g = cache["k"].reshape((G, att_per) + cache["k"].shape[1:])
+        v_g = cache["v"].reshape((G, att_per) + cache["v"].shape[1:])
+        x, (hs, convs, ks, vs) = maybe_scan(
+            cfg, body, x, (gp_all, rec_g, conv_g, k_g, v_g))
+        hs = hs.reshape((-1,) + hs.shape[2:])
+        convs = convs.reshape((-1,) + convs.shape[2:])
+
+        tail_h, tail_c = [], []
+        if "tail" in params:
+            tp_all = cast_tree(params["tail"], cfg.dtype)
+            ri = G * rec_per
+            for j, kind in enumerate(self.tail_kinds):
+                lp = tp_all[f"mix{j}"]
+                if kind == "rec":
+                    x, h_new, ring = self._rec_step(
+                        lp, x, cache["h"][ri], cache["conv"][ri])
+                    tail_h.append(h_new), tail_c.append(ring)
+                    ri += 1
+                x = self._ffn_fwd(tp_all[f"ffn{j}"], x)
+        if tail_h:
+            hs = jnp.concatenate([hs, jnp.stack(tail_h)], 0)
+            convs = jnp.concatenate([convs, jnp.stack(tail_c)], 0)
+
+        x = blocks.norm_apply(cfg, params["final_norm"], x)
+        new_cache = {"k": ks.reshape((-1,) + ks.shape[2:]),
+                     "v": vs.reshape((-1,) + vs.shape[2:]),
+                     "h": hs, "conv": convs}
+        return new_cache, blocks.logits_out(cfg, params, x)

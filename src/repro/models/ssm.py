@@ -1,0 +1,223 @@
+"""mamba2 — SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Train/prefill use the chunked dual form: a ``lax.scan`` over sequence chunks
+carrying the (B, heads, head_dim, state) SSM state; each chunk does the
+quadratic intra-chunk piece (attention-like, O(chunk^2)) plus the low-rank
+inter-chunk state pass. Decode is the O(1)-state recurrence — which is why
+this arch runs the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import blocks
+from repro.models.layers import rms_norm, softmax_xent, cast_tree
+from repro.models.params import Decl
+from repro.models.transformer import DenseLM, _maybe_remat, maybe_scan
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv. x: (B,S,D), w: (K,D)."""
+    K = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        shift = K - 1 - i
+        xi = x if shift == 0 else jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi * w[i]
+    return out
+
+
+def _conv_step(ring, xt, w):
+    """One-token conv. ring: (B,K-1,D) past inputs; xt: (B,1,D)."""
+    window = jnp.concatenate([ring, xt], axis=1)          # (B,K,D)
+    yt = jnp.einsum("bkd,kd->bd", window, w)[:, None]     # (B,1,D)
+    return window[:, 1:], yt
+
+
+class MambaLM(DenseLM):
+    def __init__(self, cfg: ArchConfig):
+        super().__init__(cfg)
+        s = cfg.ssm
+        self.di = s.d_inner(cfg.d_model)
+        self.nh = s.n_heads(cfg.d_model)
+        self.gn = s.n_groups * s.d_state
+
+    # ------------------------------------------------------------ decls ----
+    def layer_decls(self) -> dict:
+        cfg = self.cfg
+        s = cfg.ssm
+        L, d, di, nh, gn = cfg.n_layers, cfg.d_model, self.di, self.nh, self.gn
+        return {
+            "norm": blocks.norm_decls(cfg, L),
+            "wz": Decl((L, d, di), ("layers", "embed", "ssm_inner")),
+            "wx": Decl((L, d, di), ("layers", "embed", "ssm_inner")),
+            "wB": Decl((L, d, gn), ("layers", "embed", None)),
+            "wC": Decl((L, d, gn), ("layers", "embed", None)),
+            "wdt": Decl((L, d, nh), ("layers", "embed", "ssm_heads")),
+            "dt_bias": Decl((L, nh), ("layers", "ssm_heads"), init="zeros"),
+            "A_log": Decl((L, nh), ("layers", "ssm_heads"), init="small"),
+            "D": Decl((L, nh), ("layers", "ssm_heads"), init="ones"),
+            "conv_x": Decl((L, s.conv_width, di), ("layers", None, "ssm_inner"),
+                           init="small"),
+            "conv_B": Decl((L, s.conv_width, gn), ("layers", None, None), init="small"),
+            "conv_C": Decl((L, s.conv_width, gn), ("layers", None, None), init="small"),
+            "gate_norm": Decl((L, di), ("layers", "ssm_inner"), init="zeros"),
+            "wo": Decl((L, di, d), ("layers", "ssm_inner", "embed")),
+        }
+
+    def cache_decls(self, batch: int, capacity: int) -> dict:
+        cfg = self.cfg
+        s = cfg.ssm
+        L, cw = cfg.n_layers, s.conv_width
+        return {
+            "H": Decl((L, batch, self.nh, s.head_dim, s.d_state),
+                      ("layers", "batch", "ssm_heads", None, "state"),
+                      init="zeros", dtype="float32"),
+            "conv_x": Decl((L, batch, cw - 1, self.di),
+                           ("layers", "batch", None, "ssm_inner"),
+                           init="zeros", dtype="float32"),
+            "conv_B": Decl((L, batch, cw - 1, self.gn),
+                           ("layers", "batch", None, None), init="zeros",
+                           dtype="float32"),
+            "conv_C": Decl((L, batch, cw - 1, self.gn),
+                           ("layers", "batch", None, None), init="zeros",
+                           dtype="float32"),
+        }
+
+    # ---------------------------------------------------------- SSD core ---
+    def _branches(self, lp, x):
+        """Projections + conv + activations for a (B,S,d) slab."""
+        cfg = self.cfg
+        z = x @ lp["wz"]
+        xr = jax.nn.silu(_causal_conv(x @ lp["wx"], lp["conv_x"]))
+        Br = jax.nn.silu(_causal_conv(x @ lp["wB"], lp["conv_B"]))
+        Cr = jax.nn.silu(_causal_conv(x @ lp["wC"], lp["conv_C"]))
+        dt = jax.nn.softplus((x @ lp["wdt"]).astype(jnp.float32) + lp["dt_bias"])
+        return z, xr, Br, Cr, dt
+
+    def _ssd(self, lp, xr, Br, Cr, dt, H0):
+        """Chunked SSD. xr: (B,S,di); Br/Cr: (B,S,gn); dt: (B,S,nh) fp32.
+
+        Returns (y (B,S,di), H_final (B,nh,hd,N) fp32).
+        """
+        cfg = self.cfg
+        s = cfg.ssm
+        B, S, _ = xr.shape
+        nh, hd, N, G = self.nh, s.head_dim, s.d_state, s.n_groups
+        Q = min(s.chunk, S)
+        nc, rem = divmod(S, Q)
+
+        A = -jnp.exp(lp["A_log"].astype(jnp.float32))            # (nh,) < 0
+        head_group = jnp.arange(nh) // (nh // G)
+
+        S_main = nc * Q
+        xh = xr[:, :S_main].reshape(B, nc, Q, nh, hd)
+        Bh = Br[:, :S_main].reshape(B, nc, Q, G, N)[:, :, :, head_group]
+        Ch = Cr[:, :S_main].reshape(B, nc, Q, G, N)[:, :, :, head_group]
+        dtc = dt[:, :S_main].reshape(B, nc, Q, nh)
+        xbar = (xh.astype(jnp.float32) * dtc[..., None])         # dt-weighted input
+
+        def chunk_step(H, inp):
+            Qc = inp[0].shape[1]  # static chunk length (Q or the remainder)
+            xb, Bc, Cc, dA = inp              # (B,Q,nh,hd) (B,Q,nh,N) x2 (B,Q,nh)
+            cum = jnp.cumsum(dA, axis=1)                          # (B,Q,nh)
+            Lm = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])
+            Lm = jnp.where(jnp.tril(jnp.ones((Qc, Qc), bool))[None, :, :, None],
+                           Lm, 0.0)
+            CB = jnp.einsum("bqhn,bphn->bqph", Cc.astype(jnp.float32),
+                            Bc.astype(jnp.float32))
+            y_diag = jnp.einsum("bqph,bphd->bqhd", CB * Lm, xb)
+            y_off = jnp.einsum("bqhn,bhdn->bqhd",
+                               Cc.astype(jnp.float32) * jnp.exp(cum)[..., None], H)
+            decay = jnp.exp(cum[:, -1:, :] - cum)                 # (B,Q,nh)
+            H_new = H * jnp.exp(cum[:, -1, :])[:, :, None, None] + \
+                jnp.einsum("bphn,bphd->bhdn",
+                           Bc.astype(jnp.float32) * decay[..., None], xb)
+            return H_new, y_diag + y_off
+
+        xs = (xbar.transpose(1, 0, 2, 3, 4), Bh.transpose(1, 0, 2, 3, 4),
+              Ch.transpose(1, 0, 2, 3, 4),
+              (dtc * A).transpose(1, 0, 2, 3))
+        H, ys = jax.lax.scan(chunk_step, H0, xs)
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S_main, nh, hd)
+
+        if rem:  # trailing partial chunk (arbitrary sequence lengths)
+            xh_r = xr[:, S_main:].reshape(B, rem, nh, hd)
+            Bh_r = Br[:, S_main:].reshape(B, rem, G, N)[:, :, head_group]
+            Ch_r = Cr[:, S_main:].reshape(B, rem, G, N)[:, :, head_group]
+            dt_r = dt[:, S_main:]
+            dtc_r = dt_r.reshape(B, rem, nh)
+            H, y_r = chunk_step(H, (xh_r.astype(jnp.float32)
+                                    * dtc_r[..., None],
+                                    Bh_r, Ch_r, dtc_r * A))
+            y = jnp.concatenate([y, y_r], axis=1)
+
+        y = y + xr.astype(jnp.float32).reshape(B, S, nh, hd) \
+            * lp["D"].astype(jnp.float32)[:, None]
+        return y.reshape(B, S, self.di).astype(xr.dtype), H
+
+    def _layer_fwd(self, x, lp, pos, collect_kv: bool):
+        cfg = self.cfg
+        s = cfg.ssm
+        h = blocks.norm_apply(cfg, lp["norm"], x)
+        z, xr, Br, Cr, dt = self._branches(lp, h)
+        H0 = jnp.zeros((x.shape[0], self.nh, s.head_dim, s.d_state), jnp.float32)
+        y, H = self._ssd(lp, xr, Br, Cr, dt, H0)
+        y = rms_norm(y * jax.nn.silu(z), lp["gate_norm"], cfg.norm_eps)
+        x = x + y @ lp["wo"]
+        if collect_kv:
+            cw = s.conv_width
+            tail = lambda t: t[:, -(cw - 1):].astype(jnp.float32)
+            ys = (H, tail(h @ lp["wx"]), tail(h @ lp["wB"]), tail(h @ lp["wC"]))
+        else:
+            ys = None
+        return x, ys
+
+    # ------------------------------------------------------------ prefill --
+    def prefill(self, params, batch, capacity=None):
+        """capacity ignored: the SSM/conv state is O(1) in sequence length."""
+        cfg = self.cfg
+        x, pos, _ = self.embed_inputs(params, batch)
+        x, ys = self.backbone(params, x, pos, collect_kv=True)
+        logits = blocks.logits_out(cfg, params, x[:, -1:])
+        cache = {"H": ys[0], "conv_x": ys[1], "conv_B": ys[2], "conv_C": ys[3]}
+        return cache, logits
+
+    # ------------------------------------------------------------- decode --
+    def decode(self, params, cache, token, pos):
+        cfg = self.cfg
+        s = cfg.ssm
+        x = blocks.embed_tokens(params, token, cfg.dtype)    # (B,1,d)
+        lp_all = cast_tree(params["layers"], cfg.dtype)
+
+        def body(x, xs):
+            lp, H, rx, rB, rC = xs
+            h = blocks.norm_apply(cfg, lp["norm"], x)
+            z = h @ lp["wz"]
+            rx, xr = _conv_step(rx, (h @ lp["wx"]).astype(jnp.float32), lp["conv_x"])
+            rB, Br = _conv_step(rB, (h @ lp["wB"]).astype(jnp.float32), lp["conv_B"])
+            rC, Cr = _conv_step(rC, (h @ lp["wC"]).astype(jnp.float32), lp["conv_C"])
+            xr, Br, Cr = map(jax.nn.silu, (xr, Br, Cr))
+            dt = jax.nn.softplus((h @ lp["wdt"]).astype(jnp.float32)
+                                 + lp["dt_bias"])[:, 0]       # (B,nh)
+            A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+            head_group = jnp.arange(self.nh) // (self.nh // s.n_groups)
+            Bh = Br[:, 0].reshape(-1, s.n_groups, s.d_state)[:, head_group]
+            Ch = Cr[:, 0].reshape(-1, s.n_groups, s.d_state)[:, head_group]
+            xh = xr[:, 0].reshape(-1, self.nh, s.head_dim)
+            dA = jnp.exp(dt * A)                              # (B,nh)
+            H = H * dA[..., None, None] + jnp.einsum(
+                "bhn,bhd,bh->bhdn", Bh, xh, dt)
+            y = jnp.einsum("bhn,bhdn->bhd", Ch, H) + xh * lp["D"][:, None]
+            y = y.reshape(-1, 1, self.di).astype(x.dtype)
+            y = rms_norm(y * jax.nn.silu(z), lp["gate_norm"], cfg.norm_eps)
+            return x + y @ lp["wo"], (H, rx, rB, rC)
+
+        x, (H, rx, rB, rC) = maybe_scan(
+            cfg, body, x, (lp_all, cache["H"], cache["conv_x"],
+                           cache["conv_B"], cache["conv_C"]))
+        x = blocks.norm_apply(cfg, params["final_norm"], x)
+        cache = {"H": H, "conv_x": rx, "conv_B": rB, "conv_C": rC}
+        return cache, blocks.logits_out(cfg, params, x)

@@ -1,0 +1,244 @@
+"""Dense decoder-only transformer (qwen2/2.5/3, minitron) and the
+prefix-LM VLM variant (paligemma: stubbed SigLIP patch embeddings + gemma
+text backbone).
+
+Layer stacks are ``lax.scan`` over stacked parameters (keeps HLO size and
+compile time O(1) in depth) with optional per-layer remat.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import blocks
+from repro.models.layers import ffn_apply, softmax_xent, cast_tree
+from repro.models.params import Decl, abstract_params, init_params
+
+
+def _maybe_remat(fn, enabled, policy: str = "nothing"):
+    """enabled may be a bool or an ArchConfig (reads .remat/.remat_policy).
+
+    policy "dots" saves matmul outputs — the backward then re-runs only
+    elementwise work and, crucially, does NOT replay the forward's
+    resharding collectives (a §Perf lever when attention batch-resharding
+    is active)."""
+    if hasattr(enabled, "remat"):
+        policy = getattr(enabled, "remat_policy", "nothing")
+        enabled = enabled.remat
+    if not enabled:
+        return fn
+    pol = (jax.checkpoint_policies.dots_saveable if policy == "dots"
+           else jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(fn, policy=pol)
+
+
+def maybe_scan(cfg: ArchConfig, body, carry, xs, collect: bool = True):
+    """lax.scan over stacked layer params, or a Python unroll when
+    cfg.scan_layers is False (the dry-run's cost probes need unrolled HLO:
+    XLA cost_analysis counts a while body ONCE, not x trip-count)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if not collect or all(y is None for y in ys):
+        return carry, None
+    return carry, jax.tree.map(lambda *a: jnp.stack(a), *ys)
+
+
+def _pad_cache_seq(cache, capacity: int, axis: int):
+    """Right-pad every cache leaf to ``capacity`` along the seq axis."""
+    def one(t):
+        cur = t.shape[axis]
+        if cur >= capacity:
+            return t
+        pads = [(0, 0)] * t.ndim
+        pads[axis] = (0, capacity - cur)
+        return jnp.pad(t, pads)
+    return jax.tree.map(one, cache)
+
+
+class DenseLM:
+    """Unified model API: param_decls / cache_decls / loss / prefill / decode."""
+
+    family_kind = "causal"   # attention mask kind for self-attention
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------ decls ----
+    def layer_decls(self) -> dict:
+        cfg = self.cfg
+        L = cfg.n_layers
+        return {
+            "attn_norm": blocks.norm_decls(cfg, L),
+            "attn": blocks.attn_decls(cfg, L),
+            "ffn_norm": blocks.norm_decls(cfg, L),
+            "ffn": blocks.ffn_decls(cfg, L),
+        }
+
+    def param_decls(self) -> dict:
+        return {**blocks.embed_decls(self.cfg), "layers": self.layer_decls()}
+
+    def cache_decls(self, batch: int, capacity: int) -> dict:
+        return blocks.kv_cache_decls(self.cfg, self.cfg.n_layers, batch, capacity)
+
+    # ------------------------------------------------------------ decode pos
+    def prefix_len(self) -> int:
+        return 0
+
+    # ------------------------------------------------------------ stacks ---
+    def _layer_fwd(self, x, lp, pos, collect_kv: bool):
+        cfg = self.cfg
+        h = blocks.norm_apply(cfg, lp["attn_norm"], x)
+        kind = "prefix" if self.prefix_len() else "causal"
+        o, k, v = blocks.attn_apply(cfg, lp["attn"], h, pos=pos, kind=kind,
+                                    prefix_len=self.prefix_len())
+        x = x + o
+        h = blocks.norm_apply(cfg, lp["ffn_norm"], x)
+        x = x + ffn_apply(h, lp["ffn"], cfg.ffn_kind)
+        ys = (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)) if collect_kv else None
+        return x, ys
+
+    def backbone(self, params, x, pos, collect_kv: bool = False):
+        cfg = self.cfg
+        lp_all = cast_tree(params["layers"], cfg.dtype)
+
+        def body(carry, lp):
+            return self._layer_fwd(carry, lp, pos, collect_kv)
+
+        body = _maybe_remat(body, cfg)
+        x, kv = maybe_scan(cfg, body, x, lp_all, collect=collect_kv)
+        x = blocks.norm_apply(cfg, params["final_norm"], x)
+        return x, kv
+
+    # ---------------------------------------------------------- embedding --
+    def embed_inputs(self, params, batch):
+        """Returns (x, pos, text_offset). Overridden by the VLM variant."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = blocks.embed_tokens(params, tokens, cfg.dtype)
+        pos = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        return x, pos, 0
+
+    # --------------------------------------------------------------- loss --
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x, pos, off = self.embed_inputs(params, batch)
+        x, _ = self.backbone(params, x, pos)
+        if off:
+            x = x[:, off:]
+        logits = blocks.logits_out(cfg, params, x)
+        return softmax_xent(logits, batch["labels"])
+
+    # ------------------------------------------------------------ prefill --
+    def prefill(self, params, batch, capacity: Optional[int] = None):
+        """capacity: total KV slots to allocate (>= attended length +
+        tokens to decode). Without it the cache is exactly prompt-sized
+        and the first decode write would clamp (dynamic_update_slice
+        clamps out-of-range starts) — so serving MUST pass it."""
+        cfg = self.cfg
+        x, pos, _ = self.embed_inputs(params, batch)
+        x, kv = self.backbone(params, x, pos, collect_kv=True)
+        logits = blocks.logits_out(cfg, params, x[:, -1:])
+        cache = {"k": kv[0], "v": kv[1]}
+        if capacity is not None:
+            cache = _pad_cache_seq(cache, capacity, axis=2)
+        return cache, logits
+
+    # ------------------------------------------------------------- decode --
+    def decode(self, params, cache, token, pos):
+        """token: (B,1) int32; pos: () int32 = number of TEXT tokens already
+        cached (the prefix offset — patches for VLM — is added internally).
+        """
+        cfg = self.cfg
+        pos = pos + self.prefix_len()   # absolute position in attended seq
+        x = blocks.embed_tokens(params, token, cfg.dtype)
+        lp_all = cast_tree(params["layers"], cfg.dtype)
+        kind = "prefix" if self.prefix_len() else "causal"
+
+        def body(x, xs):
+            lp, ck, cv = xs
+            h = blocks.norm_apply(cfg, lp["attn_norm"], x)
+            o, ck, cv = blocks.attn_decode(cfg, lp["attn"], h, ck, cv, pos,
+                                           kind=kind, prefix_len=self.prefix_len())
+            x = x + o
+            h = blocks.norm_apply(cfg, lp["ffn_norm"], x)
+            x = x + ffn_apply(h, lp["ffn"], cfg.ffn_kind)
+            return x, (ck, cv)
+
+        x, (ck, cv) = maybe_scan(cfg, body, x,
+                                 (lp_all, cache["k"], cache["v"]))
+        x = blocks.norm_apply(cfg, params["final_norm"], x)
+        logits = blocks.logits_out(cfg, params, x)
+        return {"k": ck, "v": cv}, logits
+
+    # ------------------------------------------------------- input specs ---
+    def input_specs(self, shape: ShapeSpec) -> dict:
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        # decode: one new token against a cache of S
+        return {"token": jax.ShapeDtypeStruct((B, 1), i32),
+                "pos": jax.ShapeDtypeStruct((), i32)}
+
+    def input_logical(self, shape: ShapeSpec) -> dict:
+        """Logical axes for input arrays (resolved by runtime.sharding)."""
+        if shape.kind == "train":
+            return {"tokens": ("batch", None), "labels": ("batch", None)}
+        if shape.kind == "prefill":
+            return {"tokens": ("batch", None)}
+        return {"token": ("batch", None), "pos": ()}
+
+
+class VLM(DenseLM):
+    """paligemma: [patch embeddings | text] with a prefix-LM mask.
+
+    The SigLIP tower is a stub per the assignment: ``input_specs`` supplies
+    precomputed (B, n_patches, d_model) patch embeddings; text length is
+    seq_len - n_patches so the attended sequence length is exactly the
+    assigned shape.
+    """
+
+    def prefix_len(self) -> int:
+        return self.cfg.vlm.n_patches
+
+    def embed_inputs(self, params, batch):
+        cfg = self.cfg
+        tok = blocks.embed_tokens(params, batch["tokens"], cfg.dtype)
+        patches = batch["patches"].astype(cfg.dtype)
+        x = jnp.concatenate([patches, tok], axis=1)
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        return x, pos, cfg.vlm.n_patches
+
+    def input_specs(self, shape: ShapeSpec) -> dict:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        P = cfg.vlm.n_patches
+        T = S - P  # text length so that total seq == assigned seq_len
+        i32, f32 = jnp.int32, jnp.float32
+        patches = jax.ShapeDtypeStruct((B, P, cfg.d_model), f32)
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((B, T), i32),
+                    "labels": jax.ShapeDtypeStruct((B, T), i32),
+                    "patches": patches}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((B, T), i32),
+                    "patches": patches}
+        return {"token": jax.ShapeDtypeStruct((B, 1), i32),
+                "pos": jax.ShapeDtypeStruct((), i32)}
+
+    def input_logical(self, shape: ShapeSpec) -> dict:
+        out = super().input_logical(shape)
+        if shape.kind in ("train", "prefill"):
+            out["patches"] = ("batch", None, None)
+        return out

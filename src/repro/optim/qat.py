@@ -1,0 +1,61 @@
+"""RMCM quantization-aware training wrappers (paper §4.3: the 1/9
+approximation error "can be further compensated during the training
+process").
+
+Works for any model in the framework: wrap a loss function so selected
+weight matrices pass through the straight-through RMCM fake-quantizer on
+the forward pass. For the LM architectures this is how the paper's C2
+technique becomes a first-class inference feature (DESIGN.md §4): train
+with ``qat_loss(...)``, deploy with ``rmcm.quantize_tree`` + the
+dequant-fused matmul kernel.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rmcm
+
+
+def default_filter(path, leaf) -> bool:
+    """Quantize weight matrices (ndim >= 2), skip embeddings and norms —
+    the MONB/SONB split: hidden matmuls approximate, heads/tables exact."""
+    name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+    if leaf.ndim < 2:
+        return False
+    if any(k in name for k in ("embed", "unembed", "norm", "pos")):
+        return False
+    return True
+
+
+def fake_quant_selected(params, should_quant: Callable = default_filter):
+    """Straight-through fake-quant on the leaves selected by the filter."""
+    def one(path, leaf):
+        if jnp.issubdtype(leaf.dtype, jnp.floating) and should_quant(path, leaf):
+            return rmcm.fake_quant(leaf)
+        return leaf
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def qat_loss(loss_fn: Callable, should_quant: Callable = default_filter):
+    """loss_fn(params, ...) -> loss_fn with RMCM fake-quant in the forward.
+
+    Gradients flow straight-through to the master weights; the optimizer
+    updates full-precision params while the loss sees deploy-time numerics.
+    """
+    def wrapped(params, *args, **kw):
+        return loss_fn(fake_quant_selected(params, should_quant), *args, **kw)
+    return wrapped
+
+
+def quantize_for_deploy(params, should_quant: Callable = default_filter):
+    """Post-QAT export: RMCM-quantize the selected leaves (others pass
+    through). The result pairs with kernels.ops.rmcm_matmul."""
+    def one(path, leaf):
+        if jnp.issubdtype(leaf.dtype, jnp.floating) and should_quant(path, leaf):
+            return rmcm.quantize(leaf)
+        return leaf
+    return jax.tree_util.tree_map_with_path(one, params)

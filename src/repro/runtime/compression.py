@@ -1,0 +1,97 @@
+"""int8 gradient compression with error feedback (beyond-paper
+distributed-optimization trick; DESIGN.md §6).
+
+The data-parallel gradient all-reduce = reduce-scatter + all-gather. We
+keep the reduce-scatter exact (f32 — partial sums must not saturate) and
+compress the all-gather leg to int8 + per-row scales, cutting its wire
+bytes ~4x. Quantization error is fed back: each device remembers the
+residual of its OWN scattered segment and adds it to the next step's
+segment before quantizing — the standard EF-SGD construction, which keeps
+the long-run gradient unbiased and provably preserves SGD convergence
+rates.
+
+Usage (inside ``shard_map`` over the data axis):
+
+    gseg, new_err = compressed_psum_mean(g, err, axis="data")
+
+State shape: one residual per leaf with the leaf's *scattered* shape
+(leading axis / n_devices).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+_ROW = 256  # quantization row width
+
+
+def quant_rows(x, axis: int = -1):
+    """f32 -> (int8, f32 scale) with per-row absmax along ``axis``."""
+    scale = jnp.max(jnp.abs(x), axis=axis, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequant_rows(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def _flatten_pad(g, n: int):
+    flat = g.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    return jnp.pad(flat, (0, pad)), pad
+
+
+def compressed_psum_mean(g, err, axis: str):
+    """One leaf: mean-all-reduce over ``axis`` with int8-compressed
+    all-gather + error feedback. Returns (g_mean (full shape), new_err
+    (scattered shape))."""
+    n = jax.lax.psum(1, axis)
+    flat, pad = _flatten_pad(g, n * _ROW)       # segments divisible by _ROW
+    seg = jax.lax.psum_scatter(flat, axis, scatter_dimension=0,
+                               tiled=True) / n                 # exact RS mean
+    seg = seg + err                                            # error feedback
+    rows = seg.reshape(-1, _ROW)
+    q, s = quant_rows(rows)
+    deq = dequant_rows(q, s).reshape(seg.shape)
+    new_err = seg - deq
+    qg = jax.lax.all_gather(q, axis, tiled=True)               # int8 wire
+    sg = jax.lax.all_gather(s, axis, tiled=True)               # f32 (1/256th)
+    full = dequant_rows(qg, sg).reshape(flat.shape)
+    if pad:
+        full = full[:-pad]
+    return full.reshape(g.shape), new_err
+
+
+def init_error_state(params, axis_size: int):
+    """Residual tree matching the scattered segment shapes."""
+    def one(p):
+        flat = p.size
+        block = axis_size * _ROW
+        seg = (flat + (-flat) % block) // axis_size
+        return jnp.zeros((seg,), jnp.float32)
+    return jax.tree.map(one, params)
+
+
+def tree_compressed_psum_mean(grads, err_state, axis: str):
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    outs = [compressed_psum_mean(g.astype(jnp.float32), e, axis)
+            for g, e in zip(flat_g, flat_e)]
+    gs = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    es = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return gs, es
+
+
+def wire_bytes_saved(n_params: int, axis_size: int) -> dict:
+    """Analytic wire-byte model for EXPERIMENTS.md: per-device bytes of the
+    AG leg, f32 vs int8 (+ scales)."""
+    frac = (axis_size - 1) / axis_size
+    f32 = 4 * n_params * frac
+    int8 = (1 + 4 / 256) * n_params * frac
+    return {"allgather_f32": f32, "allgather_int8": int8,
+            "ratio": f32 / int8}

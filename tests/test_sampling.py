@@ -1,0 +1,73 @@
+"""Two-pass sampling tests (paper §5.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.core import sampling
+
+
+def test_stratified_bounds_and_order():
+    t = sampling.stratified(2.0, 6.0, 64, (8,), jax.random.PRNGKey(0))
+    assert t.shape == (8, 64)
+    assert float(t.min()) >= 2.0 and float(t.max()) <= 6.0
+    assert bool(jnp.all(jnp.diff(t, axis=-1) > 0))
+
+
+def test_stratified_deterministic_midpoints():
+    t = sampling.stratified(0.0, 1.0, 4)
+    np.testing.assert_allclose(t, [0.125, 0.375, 0.625, 0.875], atol=1e-6)
+
+
+def test_importance_concentrates_on_peak():
+    """Weights peaked at t=4 => fine samples cluster near 4."""
+    t = sampling.stratified(2.0, 6.0, 64, (16,), jax.random.PRNGKey(1))
+    w = jnp.exp(-((t - 4.0) ** 2) / 0.05)
+    tf = sampling.importance(t, w, 128, jax.random.PRNGKey(2))
+    assert tf.shape == (16, 128)
+    assert abs(float(tf.mean()) - 4.0) < 0.15
+    assert float(jnp.std(tf)) < 0.5   # much tighter than the [2,6] prior
+    assert bool(jnp.all((tf >= 2.0) & (tf <= 6.0)))
+
+
+def test_importance_uniform_weights_cover_range():
+    t = sampling.stratified(0.0, 1.0, 32, (4,), jax.random.PRNGKey(3))
+    w = jnp.ones_like(t)
+    tf = sampling.importance(t, w, 256, jax.random.PRNGKey(4))
+    assert float(tf.min()) < 0.1 and float(tf.max()) > 0.9
+
+
+def test_importance_deterministic_mode():
+    t = sampling.stratified(2.0, 6.0, 16, (2,))
+    w = jnp.ones_like(t)
+    a = sampling.importance(t, w, 8)
+    b = sampling.importance(t, w, 8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_merge_sorted():
+    a = jnp.array([[1.0, 3.0, 5.0]])
+    b = jnp.array([[2.0, 4.0, 6.0]])
+    m = sampling.merge_sorted(a, b)
+    np.testing.assert_allclose(m[0], [1, 2, 3, 4, 5, 6])
+
+
+def test_deltas():
+    t = jnp.array([[1.0, 2.0, 4.0]])
+    d = sampling.deltas_from_t(t, far_cap=9.0)
+    np.testing.assert_allclose(d[0], [1.0, 2.0, 9.0])
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_importance_within_support(seed):
+    """Fine samples always lie within [min(t), max(t)] of the coarse set."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    t = sampling.stratified(1.0, 5.0, 32, (3,), k1)
+    w = jax.nn.relu(jax.random.normal(k2, t.shape)) + 1e-3
+    tf = sampling.importance(t, w, 64, k3)
+    assert bool(jnp.all(tf >= t[..., :1] - 1e-5))
+    assert bool(jnp.all(tf <= t[..., -1:] + 1e-5))

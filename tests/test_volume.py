@@ -1,0 +1,87 @@
+"""VRU tests: paper eq.(4) == eq.(5) == parallel log-space form, plus
+analytic invariants of volume rendering."""
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import sampling, volume
+
+
+def _random_ray(key, n, batch=4):
+    ks = jax.random.split(key, 3)
+    sigma = jax.nn.relu(jax.random.normal(ks[0], (batch, n)) * 2)
+    rgb = jax.nn.sigmoid(jax.random.normal(ks[1], (batch, n, 3)))
+    t = jnp.sort(jax.random.uniform(ks[2], (batch, n)), axis=-1) * 4 + 2
+    return sigma, rgb, t
+
+
+@pytest.mark.parametrize("n", [1, 2, 7, 64, 192])
+@pytest.mark.parametrize("cap", [1.0, 1e10])
+def test_eq4_eq5_parallel_agree(n, cap):
+    sigma, rgb, t = _random_ray(jax.random.PRNGKey(n), n)
+    d = sampling.deltas_from_t(t, far_cap=cap)
+    r_ref, a_ref = volume.render_ref(sigma, rgb, d)
+    r_scan, a_scan = volume.render_scan(sigma, rgb, d)
+    r_par, a_par = volume.render_parallel(sigma, rgb, d)
+    np.testing.assert_allclose(r_ref, r_scan, atol=1e-5)
+    np.testing.assert_allclose(r_ref, r_par, atol=1e-5)
+    np.testing.assert_allclose(a_ref["weights"], a_scan["weights"], atol=1e-5)
+    np.testing.assert_allclose(a_ref["weights"], a_par["weights"], atol=1e-5)
+
+
+def test_weights_partition_of_unity():
+    """sum_i w_i = 1 - T_final; with an opaque far cap it's exactly 1."""
+    sigma, rgb, t = _random_ray(jax.random.PRNGKey(0), 64)
+    d = sampling.deltas_from_t(t, far_cap=1e10)
+    sigma = sigma + 0.5  # strictly positive density => opaque cap
+    _, aux = volume.render_parallel(sigma, rgb, d)
+    np.testing.assert_allclose(aux["acc"], 1.0, atol=1e-5)
+
+
+def test_zero_density_renders_nothing():
+    sigma = jnp.zeros((2, 16))
+    rgb = jnp.ones((2, 16, 3)) * 0.7
+    t = jnp.broadcast_to(jnp.linspace(2, 6, 16), (2, 16))
+    out, aux = volume.render_parallel(sigma, rgb, sampling.deltas_from_t(t))
+    np.testing.assert_allclose(out, 0.0, atol=1e-7)
+    np.testing.assert_allclose(aux["acc"], 0.0, atol=1e-7)
+    np.testing.assert_allclose(
+        volume.white_background(out, aux["acc"]), 1.0, atol=1e-7)
+
+
+def test_opaque_first_sample_wins():
+    """A very dense first sample should dominate the pixel."""
+    sigma = jnp.zeros((1, 16)).at[0, 0].set(1e6)
+    rgb = jnp.zeros((1, 16, 3)).at[0, 0].set(jnp.array([1.0, 0.0, 0.5]))
+    t = jnp.linspace(2, 6, 16)[None]
+    out, _ = volume.render_parallel(sigma, rgb, sampling.deltas_from_t(t))
+    np.testing.assert_allclose(out[0], jnp.array([1.0, 0.0, 0.5]), atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(sig=hnp.arrays(np.float32, (3, 24), elements=st.floats(0, 50)),
+       dl=hnp.arrays(np.float32, (3, 24), elements=st.floats(1e-3, 1.0)))
+def test_property_transmittance_monotone(sig, dl):
+    """T is non-increasing along the ray; weights are non-negative;
+    acc in [0, 1] — for ANY non-negative density/step profile."""
+    rgb = jnp.ones((3, 24, 3)) * 0.5
+    _, aux = volume.render_parallel(jnp.asarray(sig), rgb, jnp.asarray(dl))
+    T = np.asarray(aux["transmittance"])
+    assert (np.diff(T, axis=-1) <= 1e-6).all()
+    assert (np.asarray(aux["weights"]) >= -1e-6).all()
+    acc = np.asarray(aux["acc"])
+    assert (acc >= -1e-5).all() and (acc <= 1 + 1e-5).all()
+
+
+def test_depth_of_thin_shell():
+    """All weight at one sample => expected depth equals that sample's t."""
+    sigma = jnp.zeros((1, 32)).at[0, 10].set(1e6)
+    rgb = jnp.ones((1, 32, 3))
+    t = jnp.linspace(2, 6, 32)[None]
+    _, aux = volume.render_parallel(sigma, rgb, sampling.deltas_from_t(t))
+    depth = volume.composite_depth(aux["weights"], t)
+    np.testing.assert_allclose(depth[0], t[0, 10], rtol=1e-4)
