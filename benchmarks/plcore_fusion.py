@@ -1,14 +1,22 @@
 """Paper C1/Fig. 3 — whole-pipeline fusion: intermediate-data traffic of
 the fused PLCore vs. the unfused (GPU-style, Fig. 2a) pipeline.
 
-Two reports:
+Three reports:
   1. analytic HBM bytes per sample (the quantity the paper's architecture
      eliminates — computed from tensor shapes, exact);
   2. measured jaxpr intermediate count + wall time of both paths at tiny
      scale (CPU; the kernel path runs interpret=True so its wall time is
-     NOT indicative — the bytes number is the architectural claim).
+     NOT indicative — the bytes number is the architectural claim);
+  3. serving-pipeline comparison (``bench_pipeline``): seed per-tile host
+     loop vs. the single-dispatch lax.map pipeline vs. single-dispatch +
+     early ray termination, full-image wall time at tiny scale.
+     benchmarks/run.py persists this one as BENCH_plcore.json so the perf
+     trajectory is trackable across PRs.
 """
 from __future__ import annotations
+
+import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +72,67 @@ def run() -> None:
         cfg, p, o, dd, tt, dl)[0])(params, rays_o, rays_d, t, deltas)
     n_eqns = len(jaxpr.jaxpr.eqns)
     emit("plcore_fusion/xla_graph_eqns", 0.0, f"eqns={n_eqns}")
+
+    return bench_pipeline()
+
+
+def bench_pipeline(hw: int = None, rays_per_batch: int = 1024,
+                   ert_eps: float = 1e-2, iters: int = 3) -> dict:
+    """Full-image serving comparison: seed tile loop vs single dispatch vs
+    +ERT. Same scene/seed/tiling for all three; R = hw*hw rays.
+
+    The seed loop is timed as it serves: it rebuilds its jit wrapper per
+    image (a retrace every call), so its steady-state per-image cost
+    includes that — exactly the overhead the single-dispatch pipeline
+    removes. Set BENCH_PLCORE_HW to shrink for CI smoke runs.
+    """
+    from repro.core.plcore import render_image, render_image_tiled
+    from repro.data import rays as R
+
+    hw = hw or int(os.environ.get("BENCH_PLCORE_HW", "64"))
+    cfg = tiny()
+    params = init_params(plcore_decls(cfg), jax.random.PRNGKey(0), "float32")
+    scene = R.blob_scene()
+    c2w = R.pose_spherical(45.0, -25.0, scene.radius)
+    ro, rd = R.camera_rays(c2w, hw, hw, 0.9 * hw)
+    n_rays = hw * hw
+    n_samples = n_rays * (cfg.n_coarse + cfg.n_coarse + cfg.n_fine)
+
+    variants = {
+        "seed_loop": lambda: render_image_tiled(
+            cfg, params, ro, rd, rays_per_batch=rays_per_batch),
+        "single_dispatch": lambda: render_image(
+            cfg, params, ro, rd, rays_per_batch=rays_per_batch),
+        "single_dispatch_ert": lambda: render_image(
+            cfg, params, ro, rd, rays_per_batch=rays_per_batch,
+            ert_eps=ert_eps),
+    }
+    out = {"hw": hw, "rays": n_rays, "samples": n_samples,
+           "rays_per_batch": rays_per_batch, "ert_eps": ert_eps,
+           "variants": {}}
+    for name, fn in variants.items():
+        fn().block_until_ready()               # warm (compile cache)
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn().block_until_ready()
+            times.append(time.perf_counter() - t0)
+        wall = sorted(times)[len(times) // 2]
+        out["variants"][name] = {
+            "wall_s": round(wall, 4),
+            "rays_per_s": round(n_rays / wall, 1),
+            "samples_per_s": round(n_samples / wall, 1),
+        }
+        emit(f"plcore_fusion/pipeline_{name}", wall * 1e6,
+             f"rays_per_s={out['variants'][name]['rays_per_s']}")
+    v = out["variants"]
+    out["speedup_single_vs_seed"] = round(
+        v["seed_loop"]["wall_s"] / v["single_dispatch"]["wall_s"], 2)
+    out["speedup_ert_vs_seed"] = round(
+        v["seed_loop"]["wall_s"] / v["single_dispatch_ert"]["wall_s"], 2)
+    emit("plcore_fusion/speedup_single_vs_seed", 0.0,
+         f"x{out['speedup_single_vs_seed']}")
+    return out
 
 
 if __name__ == "__main__":

@@ -2,8 +2,10 @@
 
 Simulates the multi-display serving modes of Fig. 1/§1: monocular, stereo
 (two eyes, HMD) and a small light-field sweep (multi-view autostereoscopic
-display). Each frame is a batch of rays streamed through the PLCore; pixel
-colors come back. Writes PPM images under runs/serve_demo/.
+display). The model loads once into a PackedPlcore (weights packed once);
+each frame is then ONE dispatch — later views reuse the first view's
+compiled program, so the steady-state frame rate is what a display loop
+would see. Writes PPM images under runs/serve_demo/.
 
     PYTHONPATH=src python examples/nerf_serve.py --mode stereo --hw 32
 """
@@ -16,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.nerf_icarus import tiny
-from repro.core.plcore import plcore_decls, render_image
+from repro.core.pipeline import PackedPlcore
+from repro.core.plcore import plcore_decls
 from repro.data import rays as R
 from repro.launch.serve import write_ppm
 from repro.models.params import init_params
@@ -35,6 +38,8 @@ def main():
     ap.add_argument("--hw", type=int, default=32)
     ap.add_argument("--views", type=int, default=5)   # lightfield sweep
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--kernel", action="store_true")
+    ap.add_argument("--ert", type=float, default=0.0)
     args = ap.parse_args()
 
     cfg = tiny()
@@ -43,6 +48,8 @@ def main():
         from repro.checkpoint.ckpt import Checkpointer
         state, _ = Checkpointer(args.ckpt).restore()
         params = jax.tree.map(jnp.asarray, state["params"])
+    engine = PackedPlcore(cfg, params, use_kernel=args.kernel,
+                          ert_eps=args.ert)
 
     scene = R.blob_scene()
     base = R.pose_spherical(30.0, -20.0, scene.radius)
@@ -61,7 +68,7 @@ def main():
     for name, c2w in poses:
         ro, rd = R.camera_rays(c2w, H, W, 0.9 * W)
         t0 = time.time()
-        img = render_image(cfg, params, ro, rd, rays_per_batch=4096)
+        img = engine.render_image(ro, rd, rays_per_batch=4096)
         img.block_until_ready()
         dt = time.time() - t0
         path = outdir / f"{args.mode}_{name}.ppm"

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: full test suite + model-zoo smoke + a tiny-scale run of
+# the serving-pipeline benchmark (seed loop vs single dispatch vs +ERT).
+#
+#   bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== model-zoo smoke =="
+python scripts/smoke_check.py
+
+echo "== plcore pipeline benchmark (tiny smoke) =="
+BENCH_PLCORE_HW=16 python -m benchmarks.run fusion
+
+echo "CI OK"

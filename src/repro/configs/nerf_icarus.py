@@ -34,6 +34,13 @@ class NerfConfig:
     rmcm_enabled: bool = True
     # render batching — PLCore analogue: rays per fused-kernel tile
     rays_per_tile: int = 128    # paper batch-computing: 128 samples weight-stationary
+    # fused-kernel VMEM budget for the (rt*N, P) activation slab; rt is
+    # chosen so weights + slab stay resident (TPU v4/v5 VMEM ~= 16 MB/core)
+    kernel_vmem_budget_mb: float = 16.0
+    # early ray termination (Cicero-style): after the coarse pass, rays whose
+    # remaining transmittance T < ert_eps skip the fine-pass MLP and keep the
+    # coarse color. 0.0 disables (exact two-pass render).
+    ert_eps: float = 0.0
     image_hw: Tuple[int, int] = (800, 800)
     dtype: str = "float32"
     # §Perf lever: MLP-engine activation dtype. The VRU always integrates

@@ -36,13 +36,17 @@ def plcore_decls(cfg: NerfConfig) -> dict:
 
 # ------------------------------------------------------------- one pass -----
 def _eval_pass(cfg: NerfConfig, params, quant, rays_o, rays_d, t,
-               use_kernel: bool):
-    """Encode -> MLP -> volume-render one sample set. t: (R, N)."""
+               use_kernel: bool, packed: Optional[dict] = None, alive=None):
+    """Encode -> MLP -> volume-render one sample set. t: (R, N).
+
+    packed: pre-stacked kernel weight layout (skips per-call packing);
+    alive: optional (R,) ERT mask forwarded to the fused kernel."""
     deltas = sampling.deltas_from_t(t, far_cap=1e10)
     if use_kernel:
         from repro.kernels import ops as kops
         rgb_pix, aux = kops.fused_render(cfg, params, rays_o, rays_d, t,
-                                         deltas, quant=quant)
+                                         deltas, quant=quant, packed=packed,
+                                         alive=alive)
         return rgb_pix, aux
     cdt = jnp.dtype(cfg.compute_dtype)
     pts = rays_o[..., None, :] + t[..., None] * rays_d[..., None, :]
@@ -61,11 +65,19 @@ def _eval_pass(cfg: NerfConfig, params, quant, rays_o, rays_d, t,
 def render_rays(cfg: NerfConfig, params: dict, rays_o, rays_d,
                 key: Optional[jax.Array] = None, *,
                 quant: Optional[dict] = None, use_kernel: bool = False,
+                packed: Optional[dict] = None, ert_eps: float = 0.0,
                 white_bkgd: bool = True) -> dict:
     """Two-pass render (paper §5.1): n_coarse stratified + n_fine importance.
 
     rays_o/rays_d: (R, 3). Returns {rgb, rgb_coarse, depth, acc}.
     quant: optional {"coarse": ..., "fine": ...} RMCM trees.
+    packed: optional {"coarse": ..., "fine": ...} pre-stacked kernel weight
+    layouts (PackedPlcore caches these once per param set).
+    ert_eps > 0 enables Cicero-style early ray termination: rays whose
+    remaining transmittance after the coarse pass is < ert_eps keep the
+    coarse color and are masked out of the fine-pass MLP; if the whole
+    batch terminated the fine pass is skipped entirely (lax.cond — a real
+    branch under the single-dispatch image scan).
     """
     R = rays_o.shape[:-1]
     k1 = k2 = None
@@ -73,34 +85,64 @@ def render_rays(cfg: NerfConfig, params: dict, rays_o, rays_d,
         k1, k2 = jax.random.split(key)
     qc = (quant or {}).get("coarse")
     qf = (quant or {}).get("fine")
+    pc = (packed or {}).get("coarse")
+    pf = (packed or {}).get("fine")
 
     # ---- pass 1: coarse --------------------------------------------------
     t_c = sampling.stratified(cfg.near, cfg.far, cfg.n_coarse, R, k1)
     rgb_c, aux_c = _eval_pass(cfg, params["coarse"], qc, rays_o, rays_d, t_c,
-                              use_kernel)
+                              use_kernel, pc)
 
     # ---- pass 2: importance resample near surfaces ------------------------
-    t_f = sampling.importance(t_c, jax.lax.stop_gradient(aux_c["weights"]),
-                              cfg.n_fine, k2)
-    t_all = sampling.merge_sorted(t_c, t_f)
-    rgb_f, aux_f = _eval_pass(cfg, params["fine"], qf, rays_o, rays_d, t_all,
-                              use_kernel)
+    if ert_eps > 0.0:
+        # acc = 1 - T_N exactly, so "T < eps" == "acc > 1 - eps"
+        alive = aux_c["acc"] < (1.0 - ert_eps)
+
+        def fine_pass(_):
+            # the whole pass-2 chain — resample, merge, MLP, integrate —
+            # lives inside the branch so fully-terminated batches skip it
+            t_f = sampling.importance(
+                t_c, jax.lax.stop_gradient(aux_c["weights"]), cfg.n_fine, k2)
+            t_all = sampling.merge_sorted(t_c, t_f)
+            rgb, aux = _eval_pass(cfg, params["fine"], qf, rays_o, rays_d,
+                                  t_all, use_kernel, pf,
+                                  alive.astype(jnp.float32) if use_kernel
+                                  else None)
+            return (rgb, aux["acc"],
+                    volume.composite_depth(aux["weights"], t_all))
+
+        def skip_pass(_):
+            return (jnp.zeros(R + (3,), jnp.float32),
+                    jnp.zeros(R, jnp.float32), jnp.zeros(R, jnp.float32))
+
+        rgb_f, acc_f, depth_f = jax.lax.cond(jnp.any(alive), fine_pass,
+                                             skip_pass, operand=None)
+        # dead rays: the coarse estimate already holds ~all the radiance
+        rgb_f = jnp.where(alive[..., None], rgb_f, rgb_c)
+        aux_f = {"acc": jnp.where(alive, acc_f, aux_c["acc"])}
+        depth = jnp.where(alive, depth_f,
+                          volume.composite_depth(aux_c["weights"], t_c))
+    else:
+        t_f = sampling.importance(t_c,
+                                  jax.lax.stop_gradient(aux_c["weights"]),
+                                  cfg.n_fine, k2)
+        t_all = sampling.merge_sorted(t_c, t_f)
+        rgb_f, aux_f = _eval_pass(cfg, params["fine"], qf, rays_o, rays_d,
+                                  t_all, use_kernel, pf)
+        depth = volume.composite_depth(aux_f["weights"], t_all)
 
     if white_bkgd:
         rgb_f = volume.white_background(rgb_f, aux_f["acc"])
         rgb_c = volume.white_background(rgb_c, aux_c["acc"])
-    depth = volume.composite_depth(aux_f["weights"], t_all)
     return {"rgb": rgb_f, "rgb_coarse": rgb_c, "depth": depth,
             "acc": aux_f["acc"]}
 
 
 # -------------------------------------------------------- image rendering ---
-def render_image(cfg: NerfConfig, params, rays_o, rays_d, *,
-                 quant=None, use_kernel: bool = False,
-                 rays_per_batch: int = 4096) -> jnp.ndarray:
-    """Tile a full image through the PLCore (deterministic midpoint
-    sampling — inference mode). rays: (H, W, 3) -> rgb (H, W, 3)."""
-    H, W, _ = rays_o.shape
+def flatten_pad_rays(rays_o, rays_d, rays_per_batch: int):
+    """(H, W, 3) -> tiles (T, rays_per_batch, 3) + true ray count. Shared
+    by the seed tile loop and the single-dispatch pipeline so the two
+    paths tile identically — the bit-for-bit regression depends on it."""
     flat_o = rays_o.reshape(-1, 3)
     flat_d = rays_d.reshape(-1, 3)
     n = flat_o.shape[0]
@@ -108,15 +150,45 @@ def render_image(cfg: NerfConfig, params, rays_o, rays_d, *,
     flat_o = jnp.pad(flat_o, ((0, pad), (0, 0)))
     flat_d = jnp.pad(flat_d, ((0, pad), (0, 0)),
                      constant_values=1.0)  # avoid zero-norm dirs in padding
+    T = (n + pad) // rays_per_batch
+    return (flat_o.reshape(T, rays_per_batch, 3),
+            flat_d.reshape(T, rays_per_batch, 3), n)
+
+
+def render_image_tiled(cfg: NerfConfig, params, rays_o, rays_d, *,
+                       quant=None, use_kernel: bool = False,
+                       rays_per_batch: int = 4096) -> jnp.ndarray:
+    """The seed per-tile host loop, kept as the regression oracle for the
+    single-dispatch pipeline (core.pipeline) and as the benchmark
+    baseline: one dispatch + host sync per tile, and — because the jit
+    wrapper is rebuilt per call — a retrace per image. rays: (H, W, 3) ->
+    rgb (H, W, 3)."""
+    H, W, _ = rays_o.shape
+    o_tiles, d_tiles, n = flatten_pad_rays(rays_o, rays_d, rays_per_batch)
     fn = jax.jit(partial(render_rays, cfg, use_kernel=use_kernel,
                          white_bkgd=True))
     outs = []
-    for i in range(0, n + pad, rays_per_batch):
-        o = fn(params, flat_o[i:i + rays_per_batch],
-               flat_d[i:i + rays_per_batch], quant=quant)
+    for i in range(o_tiles.shape[0]):
+        o = fn(params, o_tiles[i], d_tiles[i], quant=quant)
         outs.append(o["rgb"])
     rgb = jnp.concatenate(outs, axis=0)[:n]
     return rgb.reshape(H, W, 3)
+
+
+def render_image(cfg: NerfConfig, params, rays_o, rays_d, *,
+                 quant=None, use_kernel: bool = False,
+                 rays_per_batch: int = 4096,
+                 ert_eps: Optional[float] = None) -> jnp.ndarray:
+    """Render a full image through the PLCore (deterministic midpoint
+    sampling — inference mode). rays: (H, W, 3) -> rgb (H, W, 3).
+
+    Single-dispatch: the whole image — every tile, both sampling passes —
+    is ONE cached XLA program (core.pipeline); no per-tile host sync, no
+    per-call retrace. ``ert_eps`` overrides cfg.ert_eps (None = use cfg)."""
+    from repro.core import pipeline
+    return pipeline.render_image_single(
+        cfg, params, rays_o, rays_d, quant=quant, use_kernel=use_kernel,
+        rays_per_batch=rays_per_batch, ert_eps=ert_eps)
 
 
 # ------------------------------------------------- multi-core dispatch ------

@@ -13,9 +13,18 @@ TPU restatement: grid over ray tiles; per grid step the kernel
      (weight-stationary across all grid steps = the paper's
      batch-computing, C6); optionally dequantizing RMCM 9-bit weights
      in-register (C2);
-  4. volume-renders with the eq. (5) streaming recurrence (VRU, C3);
+  4. volume-renders with the VRU transmittance math in closed parallel-
+     prefix form — T = exp(cumsum(x)) exclusive-shifted, w_i = T_i - T_{i+1}
+     (algebraically the eq. (5) recurrence, but N-parallel instead of N
+     serial steps; the same form as core.volume.render_parallel);
   5. writes only pixel colors + per-sample weights (the latter feed the
      two-pass importance sampler) back to HBM.
+
+Early ray termination (Cicero-style): an optional per-ray ``alive`` mask —
+when no ray in a grid tile is alive the whole MLP+VRU body is skipped via
+``pl.when`` and zeros are written (the caller keeps the coarse color for
+dead rays). With spatially coherent ray tiles this drops entire
+background/terminated tiles from the fine pass.
 
 HBM traffic per tile: rays in (rt x ~8 floats), pixels out (rt x 3) + the
 coarse-pass weights (rt x N) — vs. the unfused pipeline's O(rt x N x
@@ -23,8 +32,9 @@ coarse-pass weights (rt x N) — vs. the unfused pipeline's O(rt x N x
 quantifies it.
 
 VMEM: all weights (~1.19M params = 4.8 MB f32, 1.3 MB RMCM-packed) + a
-(rt*N, P) activation slab; ops.py picks rt so the slab fits the ~16 MB
-budget.
+(rt*N, P) activation slab; ops.py picks rt so weights AND slab together
+fit the budget set by ``NerfConfig.kernel_vmem_budget_mb`` (default
+16 MB — one TPU v4/v5 core's VMEM).
 """
 from __future__ import annotations
 
@@ -52,7 +62,7 @@ def _pe_double_angle(x, n_freqs: int):
 
 
 def _make_kernel(cfg: NerfConfig, rt: int, N: int, P: int, P2: int,
-                 quantized: bool):
+                 quantized: bool, ert: bool):
     W, C = cfg.trunk_width, cfg.color_width
     pe_dim, de_dim = cfg.pos_enc_dim, cfg.dir_enc_dim
     T = rt * N
@@ -63,6 +73,8 @@ def _make_kernel(cfg: NerfConfig, rt: int, N: int, P: int, P2: int,
         return m * (1.0 - 2.0 * sg) * scale
 
     def kernel(o_ref, d_ref, t_ref, dl_ref, *refs):
+        if ert:
+            alive_ref, refs = refs[0], refs[1:]
         if quantized:
             (tw_mag, tw_sgn, tw_scl, tb, sw, sb, fw_mag, fw_sgn, fw_scl, fb,
              cw_mag, cw_sgn, cw_scl, cb, rw, rb,
@@ -71,88 +83,107 @@ def _make_kernel(cfg: NerfConfig, rt: int, N: int, P: int, P2: int,
             (tw, tb, sw, sb, fw, fb, cw, cb, rw, rb,
              rgb_o, w_o, acc_o) = refs
 
-        o = o_ref[...].astype(jnp.float32)                 # (rt, 3)
-        d = d_ref[...].astype(jnp.float32)                 # (rt, 3)
-        ts = t_ref[...].astype(jnp.float32)                # (rt, N)
+        def compute():
+            o = o_ref[...].astype(jnp.float32)             # (rt, 3)
+            d = d_ref[...].astype(jnp.float32)             # (rt, 3)
+            ts = t_ref[...].astype(jnp.float32)            # (rt, N)
 
-        # ---- positions & PEU (double-angle) ----------------------------
-        pts = (o[:, None, :] + ts[..., None] * d[:, None, :]).reshape(T, 3)
-        pe = _pe_double_angle(pts, cfg.pos_freqs)          # (T, pe_dim)
-        dn = d * jax.lax.rsqrt(jnp.sum(d * d, -1, keepdims=True))
-        ped = _pe_double_angle(dn, cfg.dir_freqs)          # (rt, de_dim)
-        ped = jnp.broadcast_to(ped[:, None, :],
-                               (rt, N, de_dim)).reshape(T, de_dim)
+            # ---- positions & PEU (double-angle) ------------------------
+            pts = (o[:, None, :] + ts[..., None] * d[:, None, :]).reshape(T, 3)
+            pe = _pe_double_angle(pts, cfg.pos_freqs)      # (T, pe_dim)
+            dn = d * jax.lax.rsqrt(jnp.sum(d * d, -1, keepdims=True))
+            ped = _pe_double_angle(dn, cfg.dir_freqs)      # (rt, de_dim)
+            ped_b = jnp.broadcast_to(ped[:, None, :],
+                                     (rt, N, de_dim)).reshape(T, de_dim)
 
-        # ---- MLP engine (MONB) ------------------------------------------
-        def trunk_weight(i, rows):
+            # ---- MLP engine (MONB) --------------------------------------
+            def trunk_weight(i, rows):
+                if quantized:
+                    full = _dq(tw_mag[i], tw_sgn[i], tw_scl[i], P)
+                else:
+                    full = tw[i]
+                return full[:rows]
+
+            h = pe
+            for i in range(cfg.trunk_layers):
+                if i == 0:
+                    a, din = pe, pe_dim
+                elif i in cfg.skip_at:
+                    a, din = jnp.concatenate([h, pe], axis=-1), W + pe_dim
+                else:
+                    a, din = h, W
+                h = jax.nn.relu(
+                    jnp.dot(a, trunk_weight(i, din),
+                            preferred_element_type=jnp.float32) + tb[i])
+
+            # ---- heads: sigma (SONB, exact), feature, color branch ------
+            sigma = (jnp.dot(h, sw[...], preferred_element_type=jnp.float32)
+                     + sb[...])[:, 0]
             if quantized:
-                full = _dq(tw_mag[i], tw_sgn[i], tw_scl[i], P)
+                fw_full = _dq(fw_mag[...], fw_sgn[...], fw_scl[...], W)
+                cw_full = _dq(cw_mag[...], cw_sgn[...], cw_scl[...], P2)
             else:
-                full = tw[i]
-            return full[:rows]
+                fw_full, cw_full = fw[...], cw[...]
+            feat = (jnp.dot(h, fw_full, preferred_element_type=jnp.float32)
+                    + fb[...])
+            hc_in = jnp.concatenate([feat, ped_b], axis=-1)  # (T, W+de)
+            hc = jax.nn.relu(
+                jnp.dot(hc_in, cw_full[:W + de_dim],
+                        preferred_element_type=jnp.float32) + cb[...])
+            raw = (jnp.dot(hc, rw[...], preferred_element_type=jnp.float32)
+                   + rb[...])
+            rgb = jax.nn.sigmoid(raw).reshape(rt, N, 3)
 
-        h = pe
-        for i in range(cfg.trunk_layers):
-            if i == 0:
-                a, din = pe, pe_dim
-            elif i in cfg.skip_at:
-                a, din = jnp.concatenate([h, pe], axis=-1), W + pe_dim
-            else:
-                a, din = h, W
-            h = jax.nn.relu(
-                jnp.dot(a, trunk_weight(i, din),
-                        preferred_element_type=jnp.float32) + tb[i])
+            # ---- VRU: closed-form parallel prefix -----------------------
+            # T_{i+1} = exp(cumsum_{j<=i} x_j); T_0 = 1; w_i = T_i - T_{i+1}.
+            # Same math as eq.(5)'s recurrence, but one vectorized cumsum
+            # instead of N serial steps with a dynamic_update_slice each.
+            x = -(jnp.maximum(sigma, 0.0).reshape(rt, N)) * dl_ref[...]
+            T_next = jnp.exp(jnp.cumsum(x, axis=-1))       # (rt, N): T_{i+1}
+            T_i = jnp.concatenate([jnp.ones((rt, 1), jnp.float32),
+                                   T_next[:, :-1]], axis=-1)
+            w = T_i - T_next
+            accum = jnp.sum(w[..., None] * rgb, axis=1)    # (rt, 3)
+            rgb_o[...] = accum.astype(rgb_o.dtype)
+            w_o[...] = w.astype(w_o.dtype)
+            acc_o[...] = (1.0 - T_next[:, -1]).astype(acc_o.dtype)
 
-        # ---- heads: sigma (SONB, exact), feature, color branch ----------
-        sigma = (jnp.dot(h, sw[...], preferred_element_type=jnp.float32)
-                 + sb[...])[:, 0]
-        if quantized:
-            fw_full = _dq(fw_mag[...], fw_sgn[...], fw_scl[...], W)
-            cw_full = _dq(cw_mag[...], cw_sgn[...], cw_scl[...], P2)
-        else:
-            fw_full, cw_full = fw[...], cw[...]
-        feat = jnp.dot(h, fw_full, preferred_element_type=jnp.float32) + fb[...]
-        hc_in = jnp.concatenate([feat, ped], axis=-1)      # (T, W+de)
-        hc = jax.nn.relu(
-            jnp.dot(hc_in, cw_full[:W + de_dim],
-                    preferred_element_type=jnp.float32) + cb[...])
-        raw = jnp.dot(hc, rw[...], preferred_element_type=jnp.float32) + rb[...]
-        rgb = jax.nn.sigmoid(raw).reshape(rt, N, 3)
+        if not ert:
+            compute()
+            return
+        # ---- early-ray-termination fast path: skip dead tiles -----------
+        any_alive = jnp.any(alive_ref[...] > 0.0)
 
-        # ---- VRU: eq.(5) streaming recurrence ---------------------------
-        x = -(jnp.maximum(sigma, 0.0).reshape(rt, N)) * dl_ref[...]
+        @pl.when(any_alive)
+        def _():
+            compute()
 
-        def body(i, carry):
-            Tt, acc, wbuf = carry
-            T_next = Tt * jnp.exp(x[:, i])                 # T_{i+1}=T_i e^{x_i}
-            w = Tt - T_next
-            acc = acc + w[:, None] * rgb[:, i]
-            wbuf = jax.lax.dynamic_update_slice(wbuf, w[:, None], (0, i))
-            return T_next, acc, wbuf
-
-        Tt, accum, wbuf = jax.lax.fori_loop(
-            0, N, body, (jnp.ones((rt,), jnp.float32),
-                         jnp.zeros((rt, 3), jnp.float32),
-                         jnp.zeros((rt, N), jnp.float32)))
-        rgb_o[...] = accum.astype(rgb_o.dtype)
-        w_o[...] = wbuf.astype(w_o.dtype)
-        acc_o[...] = (1.0 - Tt).astype(acc_o.dtype)
+        @pl.when(jnp.logical_not(any_alive))
+        def _():
+            rgb_o[...] = jnp.zeros(rgb_o.shape, rgb_o.dtype)
+            w_o[...] = jnp.zeros(w_o.shape, w_o.dtype)
+            acc_o[...] = jnp.zeros(acc_o.shape, acc_o.dtype)
 
     return kernel
 
 
 def fused_plcore_call(cfg: NerfConfig, weights: dict, rays_o, rays_d, t,
                       deltas, *, rt: int, quantized: bool,
-                      interpret: bool = True):
+                      alive=None, interpret: bool = True):
     """Low-level pallas_call. rays: (R, 3) with R % rt == 0; t/deltas (R, N).
 
     ``weights``: layout from ops.stack_plcore_weights (P/P2 row-padded,
-    trunk stacked (L, P, W)). Returns (rgb (R,3), w (R,N), acc (R,)).
+    trunk stacked (L, P, W)). ``alive``: optional (R,) float mask; tiles
+    whose rays are all dead (== 0) skip the MLP+VRU entirely and output
+    zeros. Returns (rgb (R,3), w (R,N), acc (R,)).
     """
     R, N = t.shape
     assert R % rt == 0, (R, rt)
-    P = weights["meta"]["P"]
-    P2 = weights["meta"]["P2"]
+    # row padding is derived from cfg, NOT read out of ``weights``: the
+    # packed layout crosses jit boundaries as a traced pytree, and shapes
+    # must stay concrete
+    P = -(-(cfg.trunk_width + cfg.pos_enc_dim) // 128) * 128
+    P2 = -(-(cfg.trunk_width + cfg.dir_enc_dim) // 128) * 128
     order = (["trunk_mag", "trunk_sgn", "trunk_scl", "trunk_b",
               "sigma_w", "sigma_b", "feat_mag", "feat_sgn", "feat_scl",
               "feat_b", "color0_mag", "color0_sgn", "color0_scl", "color0_b",
@@ -164,6 +195,7 @@ def fused_plcore_call(cfg: NerfConfig, weights: dict, rays_o, rays_d, t,
     grid = (R // rt,)
     ray_spec = pl.BlockSpec((rt, 3), lambda i: (i, 0))
     samp_spec = pl.BlockSpec((rt, N), lambda i: (i, 0))
+    mask_spec = pl.BlockSpec((rt,), lambda i: (i,))
 
     def pinned(a):  # whole tensor resident every grid step (weight-stationary)
         nd = a.ndim
@@ -176,14 +208,17 @@ def fused_plcore_call(cfg: NerfConfig, weights: dict, rays_o, rays_d, t,
                  pl.BlockSpec((rt, N), lambda i: (i, 0)),
                  pl.BlockSpec((rt,), lambda i: (i,))]
 
-    kernel = _make_kernel(cfg, rt, N, P, P2, quantized)
+    ert = alive is not None
+    mask_in = [alive.astype(jnp.float32)] if ert else []
+    kernel = _make_kernel(cfg, rt, N, P, P2, quantized, ert)
     rgb, w, acc = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[ray_spec, ray_spec, samp_spec, samp_spec]
+                 + ([mask_spec] if ert else [])
                  + [pinned(a) for a in w_arrays],
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(rays_o, rays_d, t, deltas, *w_arrays)
+    )(rays_o, rays_d, t, deltas, *mask_in, *w_arrays)
     return rgb, w, acc

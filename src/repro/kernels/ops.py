@@ -53,6 +53,18 @@ def _place_rows(src, rows: int):
     return jnp.pad(src, ((0, rows - src.shape[0]), (0, 0)))
 
 
+# Pack-call counter: PackedPlcore packs once per param set at load time;
+# tests assert render calls never re-pack. Counts traces, not executions —
+# a pack inside a jitted call re-executes its pad/stack ops every dispatch
+# even though the counter only ticks at trace time, which is exactly why
+# the serving path pre-packs.
+_PACK_COUNT = 0
+
+
+def pack_count() -> int:
+    return _PACK_COUNT
+
+
 def stack_plcore_weights(cfg: NerfConfig, params: dict,
                          quant: Optional[dict] = None) -> dict:
     """Kernel weight layout: trunk stacked (L, P, W) with per-layer row
@@ -62,12 +74,14 @@ def stack_plcore_weights(cfg: NerfConfig, params: dict,
     quant != None -> RMCM layout: uint8 magnitudes + bit-packed signs +
     (1, out) scales for trunk/feat/color0 (MONB); sigma/rgb stay exact
     (SONB)."""
+    global _PACK_COUNT
+    _PACK_COUNT += 1
     W, C = cfg.trunk_width, cfg.color_width
     pe, de = cfg.pos_enc_dim, cfg.dir_enc_dim
     L = cfg.trunk_layers
     P = _rup(W + pe, 128)
     P2 = _rup(W + de, 128)
-    out = {"meta": {"P": P, "P2": P2}}
+    out = {}
 
     tb = jnp.stack([params["trunk"][f"l{i}"]["b"] for i in range(L)])
     out["trunk_b"] = tb.astype(jnp.float32)
@@ -109,22 +123,48 @@ def stack_plcore_weights(cfg: NerfConfig, params: dict,
 
 
 # ------------------------------------------------------------ fused render --
+def plcore_weight_vmem_bytes(cfg: NerfConfig) -> int:
+    """f32 footprint of the stacked weight layout the kernel pins in VMEM
+    every grid step (conservative for the smaller RMCM-packed layout)."""
+    W, C, L = cfg.trunk_width, cfg.color_width, cfg.trunk_layers
+    P = _rup(W + cfg.pos_enc_dim, 128)
+    P2 = _rup(W + cfg.dir_enc_dim, 128)
+    n = L * P * W + W * W + P2 * C + W * 1 + C * 3      # matrices
+    n += L * W + W + C + 1 + 3                          # biases
+    return 4 * n
+
+
 def pick_ray_tile(cfg: NerfConfig, n_samples: int,
-                  vmem_budget_bytes: int = 4 << 20) -> int:
-    """rt so the (rt * N, P) fp32 activation slab fits the VMEM budget."""
+                  vmem_budget_bytes: Optional[int] = None) -> int:
+    """rt so resident weights + the (rt * N, P) fp32 activation slab fit
+    the VMEM budget (``cfg.kernel_vmem_budget_mb`` unless overridden)."""
+    if vmem_budget_bytes is None:
+        vmem_budget_bytes = int(cfg.kernel_vmem_budget_mb * (1 << 20))
+    # weights stay pinned across all grid steps; the slab gets the rest
+    slab = max(vmem_budget_bytes - plcore_weight_vmem_bytes(cfg), 1 << 18)
     P = _rup(cfg.trunk_width + cfg.pos_enc_dim, 128)
-    rows = vmem_budget_bytes // (P * 4)
+    rows = slab // (P * 4)
     rt = max(8, (rows // n_samples) // 8 * 8)
     return min(rt, 128)
 
 
-def fused_render(cfg: NerfConfig, params: dict, rays_o, rays_d, t, deltas,
-                 *, quant: Optional[dict] = None, rt: Optional[int] = None,
+def fused_render(cfg: NerfConfig, params: Optional[dict], rays_o, rays_d, t,
+                 deltas, *, quant: Optional[dict] = None,
+                 packed: Optional[dict] = None, alive=None,
+                 rt: Optional[int] = None,
+                 vmem_budget_bytes: Optional[int] = None,
                  interpret: Optional[bool] = None):
-    """Drop-in for the unfused pass: (rgb (R,3), {weights, acc})."""
+    """Drop-in for the unfused pass: (rgb (R,3), {weights, acc}).
+
+    ``packed``: a pre-built stack_plcore_weights layout (PackedPlcore caches
+    one per param set at load time); when given, ``params``/``quant`` are
+    ignored and no packing work lands in the traced program. ``alive``:
+    optional (R,) mask for Cicero-style early ray termination — all-dead
+    kernel tiles skip MLP+VRU work.
+    """
     it = interpret_default() if interpret is None else interpret
     R, N = t.shape
-    rt = rt or pick_ray_tile(cfg, N)
+    rt = rt or pick_ray_tile(cfg, N, vmem_budget_bytes)
     rt = min(rt, _rup(R, 8))
     Rp = _rup(R, rt)
     if Rp != R:
@@ -133,8 +173,15 @@ def fused_render(cfg: NerfConfig, params: dict, rays_o, rays_d, t, deltas,
         rays_d = jnp.concatenate([rays_d, rays_d[-1:].repeat(padn, 0)])
         t = jnp.concatenate([t, t[-1:].repeat(padn, 0)])
         deltas = jnp.concatenate([deltas, deltas[-1:].repeat(padn, 0)])
-    weights = stack_plcore_weights(cfg, params, quant)
+        if alive is not None:   # padded rays are dead
+            alive = jnp.concatenate(
+                [alive, jnp.zeros((padn,), alive.dtype)])
+    if packed is None:
+        packed = stack_plcore_weights(cfg, params, quant)
+        quantized = quant is not None
+    else:
+        quantized = "trunk_mag" in packed
     rgb, w, acc = _fp.fused_plcore_call(
-        cfg, weights, rays_o, rays_d, t, deltas,
-        rt=rt, quantized=quant is not None, interpret=it)
+        cfg, packed, rays_o, rays_d, t, deltas,
+        rt=rt, quantized=quantized, alive=alive, interpret=it)
     return rgb[:R], {"weights": w[:R], "acc": acc[:R]}

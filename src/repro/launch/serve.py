@@ -2,12 +2,21 @@
 
 Two services:
 
-* ``--mode nerf``: the ICARUS use-case. Streams ray batches through the
-  PLCore (positions & directions in, pixels out), renders a full image,
-  writes it as PPM, and reports throughput + the roofline energy model
-  (uJ/sample next to the paper's 0.174 uJ/sample ASIC figure).
-  ``--rmcm`` serves through 9-bit RMCM weights; ``--kernel`` routes the
-  per-pass pipeline through the fused Pallas kernel.
+* ``--mode nerf``: the ICARUS use-case. Loads the model into a
+  ``PackedPlcore`` (weights packed + RMCM-quantized ONCE at load time),
+  renders a full image as ONE XLA dispatch (a ``lax.map`` over ray tiles
+  with the fused coarse->importance->fine chain inside — no per-tile host
+  sync, no per-image retrace), writes it as PPM, and reports throughput +
+  the roofline energy model (uJ/sample next to the paper's 0.174
+  uJ/sample ASIC figure).
+
+  Flags: ``--rmcm`` serves through 9-bit RMCM weights; ``--kernel``
+  routes the per-pass pipeline through the fused Pallas kernel;
+  ``--ert EPS`` enables Cicero-style early ray termination (rays whose
+  transmittance after the coarse pass is < EPS skip the fine-pass MLP);
+  ``--vmem-budget-mb`` sizes the fused kernel's activation slab;
+  ``--tiled`` falls back to the seed per-tile host loop (the benchmark
+  baseline — see benchmarks/plcore_fusion.py for the measured gap).
 
 * ``--mode lm``: batched LM inference on any assigned arch (smoke config on
   CPU): prefill a prompt batch, decode N tokens with the KV/state cache.
@@ -29,7 +38,8 @@ import numpy as np
 from repro.configs import get_config, smoke_config
 from repro.configs.nerf_icarus import CONFIG as NERF_FULL, tiny as nerf_tiny
 from repro.core import rmcm
-from repro.core.plcore import plcore_decls, render_image
+from repro.core.pipeline import PackedPlcore
+from repro.core.plcore import plcore_decls, render_image_tiled
 from repro.data import rays as R
 from repro.models.model_zoo import build_model
 from repro.models.params import init_params
@@ -65,7 +75,18 @@ def nerf_energy_uj_per_sample(cfg, fused: bool) -> float:
 
 
 def serve_nerf(args) -> dict:
+    from dataclasses import replace
+
+    from repro.kernels import ops as kops
+
     cfg = NERF_FULL if args.full else nerf_tiny()
+    if args.ert > 0.0:
+        if args.tiled:
+            raise SystemExit("--ert requires the single-dispatch pipeline; "
+                             "drop --tiled")
+        cfg = replace(cfg, ert_eps=args.ert)
+    if args.vmem_budget_mb is not None:
+        cfg = replace(cfg, kernel_vmem_budget_mb=args.vmem_budget_mb)
     key = jax.random.PRNGKey(args.seed)
     params = init_params(plcore_decls(cfg), key, "float32")
     if args.ckpt:
@@ -77,15 +98,27 @@ def serve_nerf(args) -> dict:
         quant = {"coarse": rmcm.quantize_tree(params["coarse"]),
                  "fine": rmcm.quantize_tree(params["fine"])}
 
+    # load-time work: RMCM quantization + kernel weight packing run ONCE
+    # here; every render below reuses the packed layout
+    engine = None
+    if not args.tiled:
+        engine = PackedPlcore(cfg, params, quant=quant,
+                              use_kernel=args.kernel)
+    packs_at_load = kops.pack_count()
+
     scene = R.SCENES[args.scene]()
     c2w = R.pose_spherical(args.theta, -25.0, scene.radius)
     H = W = args.hw
     ro, rd = R.camera_rays(c2w, H, W, 0.9 * W)
 
     t0 = time.time()
-    img = render_image(cfg, params, ro, rd, quant=quant,
-                       use_kernel=args.kernel,
-                       rays_per_batch=args.rays_per_batch)
+    if args.tiled:
+        img = render_image_tiled(cfg, params, ro, rd, quant=quant,
+                                 use_kernel=args.kernel,
+                                 rays_per_batch=args.rays_per_batch)
+    else:
+        img = engine.render_image(ro, rd,
+                                  rays_per_batch=args.rays_per_batch)
     img.block_until_ready()
     dt = time.time() - t0
     out = Path(args.out or f"runs/serve_nerf_{args.scene}.ppm")
@@ -101,6 +134,9 @@ def serve_nerf(args) -> dict:
         "uj_per_sample_model_fused": nerf_energy_uj_per_sample(cfg, True),
         "uj_per_sample_model_unfused": nerf_energy_uj_per_sample(cfg, False),
         "rmcm": bool(args.rmcm), "kernel": bool(args.kernel),
+        "pipeline": "tiled" if args.tiled else "single_dispatch",
+        "ert_eps": cfg.ert_eps,
+        "weight_packs_since_load": kops.pack_count() - packs_at_load,
     }
     print(json.dumps(stats, indent=2))
     return stats
@@ -161,6 +197,14 @@ def build_parser():
     ap.add_argument("--rays-per-batch", type=int, default=4096)
     ap.add_argument("--rmcm", action="store_true")
     ap.add_argument("--kernel", action="store_true")
+    ap.add_argument("--ert", type=float, default=0.0,
+                    help="early-ray-termination transmittance threshold "
+                         "(0 = exact two-pass render)")
+    ap.add_argument("--tiled", action="store_true",
+                    help="seed per-tile host loop instead of the "
+                         "single-dispatch pipeline")
+    ap.add_argument("--vmem-budget-mb", type=float, default=None,
+                    help="fused-kernel VMEM budget for the activation slab")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--out", default=None)
     # lm

@@ -87,7 +87,8 @@ def make_dp_compressed_train_step(model, opt_cfg: AdamConfig, mesh,
         return params, {**inner, "err": new_err}, metrics
 
     opt_spec = {"m": P(), "v": P(), "step": P(), "err": P(axis)}
-    return jax.shard_map(
+    from repro.runtime.compat import shard_map
+    return shard_map(
         local_step, mesh=mesh,
         in_specs=(P(), opt_spec, P(axis)),
         out_specs=(P(), opt_spec, P()),

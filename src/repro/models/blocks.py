@@ -83,8 +83,9 @@ def _batch_split_attention(fn, q, k, v):
         o = fn(sl(q), sl(k), sl(v))
         return jax.lax.all_gather(o, "model", axis=0, tiled=True)
 
-    return jax.shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
-                         out_specs=spec, check_vma=False)(q, k, v)
+    from repro.runtime.compat import shard_map
+    return shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
+                     out_specs=spec, check_vma=False)(q, k, v)
 
 
 def attn_apply(cfg: ArchConfig, p: dict, x, *, pos, kind="causal", window=0,

@@ -156,7 +156,8 @@ def _moe_apply_ep(cfg: ArchConfig, p: dict, x, mesh, rules):
 
     x_spec = P(dp, None, None)
     w3_arg = p["experts"].get("w3")
-    y, aux = jax.shard_map(
+    from repro.runtime.compat import shard_map
+    y, aux = shard_map(
         local, mesh=mesh,
         in_specs=(x_spec, r_spec, w1_spec, w2_spec,
                   w1_spec if has_w3 else P()),

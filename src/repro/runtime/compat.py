@@ -1,0 +1,19 @@
+"""Version-compat shims for the installed jax.
+
+``shard_map`` moved to the top-level namespace (with ``check_rep``
+renamed ``check_vma``) in newer jax; this container ships 0.4.x where it
+still lives in ``jax.experimental.shard_map``. Route every call through
+here so model code stays on the modern spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)

@@ -1,0 +1,121 @@
+"""Deterministic fallback shim for `hypothesis` on bare environments.
+
+The tier-1 suite uses a thin slice of the hypothesis API (`given`,
+`settings`, `strategies.floats/integers`, `extra.numpy.arrays`). When the
+real package is missing, ``install()`` registers stand-in modules in
+``sys.modules`` so the test files import unchanged; ``@given`` then runs
+each property test over a fixed-seed sweep of in-range examples (with the
+interval endpoints mixed in) instead of hypothesis' adaptive search. No
+shrinking, no example database — just enough to keep the invariant checks
+alive on a bare container.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 10
+_SEED = 0x1CA505
+
+
+class _Strategy:
+    """A draw callable: rng -> example."""
+
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(rng):
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        return lo + (hi - lo) * rng.random()
+
+    return _Strategy(draw)
+
+
+def integers(min_value=0, max_value=(1 << 30)):
+    def draw(rng):
+        return rng.randint(int(min_value), int(max_value))
+
+    return _Strategy(draw)
+
+
+def arrays(dtype, shape, *, elements=None, **_kw):
+    import numpy as np
+
+    shape = (shape,) if isinstance(shape, int) else tuple(shape)
+    n = 1
+    for s in shape:
+        n *= s
+    elems = elements if elements is not None else floats(0.0, 1.0)
+
+    def draw(rng):
+        flat = [elems.draw(rng) for _ in range(n)]
+        return np.asarray(flat, dtype=dtype).reshape(shape)
+
+    return _Strategy(draw)
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """@settings stacks OUTSIDE @given — it annotates the given-wrapper."""
+
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*args, **strategies):
+    if args:
+        raise NotImplementedError(
+            "hypothesis shim supports keyword strategies only")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*a, **kw):
+            n = getattr(wrapper, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                fn(*a, **kw, **drawn)
+
+        # hide the strategy-filled params so pytest doesn't treat them as
+        # fixtures (real hypothesis does the same)
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strategies])
+        wrapper.hypothesis_shim = True
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register hypothesis/{strategies,extra.numpy} stand-ins."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    hyp.given, hyp.settings = given, settings
+    hyp.__version__ = "0.0-shim"
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.floats, st_mod.integers = floats, integers
+    extra = types.ModuleType("hypothesis.extra")
+    hnp = types.ModuleType("hypothesis.extra.numpy")
+    hnp.arrays = arrays
+    hyp.strategies, hyp.extra, extra.numpy = st_mod, extra, hnp
+    sys.modules.update({
+        "hypothesis": hyp,
+        "hypothesis.strategies": st_mod,
+        "hypothesis.extra": extra,
+        "hypothesis.extra.numpy": hnp,
+    })

@@ -1,5 +1,15 @@
 """Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
 tests and benches must see 1 device (the dry-run sets its own 512)."""
+import pathlib
+import sys
+
+try:  # property tests degrade to a fixed-seed sweep without hypothesis
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    import _hypothesis_shim
+    _hypothesis_shim.install()
+
 import jax
 import pytest
 
