@@ -5,17 +5,29 @@
 
 Prints ``name,us_per_call,derived`` CSV lines. The ``fusion`` suite also
 persists its serving-pipeline comparison (seed tile loop vs single
-dispatch vs +ERT: wall_s / rays_per_s / samples_per_s) as
-``BENCH_plcore.json`` at the repo root so future PRs can track the perf
-trajectory machine-readably.
+dispatch vs kernel paths: wall_s / rays_per_s / samples_per_s) as
+``BENCH_plcore.json`` at the repo root: the top-level fields are the
+LATEST run, and the append-only ``history`` list (git SHA, date,
+variants, speedups per entry) records every canonical-scale run so the
+cross-PR perf trajectory survives re-runs instead of being overwritten.
 """
 from __future__ import annotations
 
 import json
 import os
 import pathlib
+import subprocess
 import sys
 import time
+
+
+def _git_sha(root: pathlib.Path):
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=root,
+            capture_output=True, text=True, check=True).stdout.strip()
+    except Exception:
+        return None
 
 
 def main() -> None:
@@ -41,10 +53,27 @@ def main() -> None:
     # CI smoke runs (BENCH_PLCORE_HW) must not clobber the canonical
     # cross-PR trajectory numbers with shrunken-scale timings
     if "fusion" in results and os.environ.get("BENCH_PLCORE_HW") is None:
-        path = pathlib.Path(__file__).resolve().parent.parent \
-            / "BENCH_plcore.json"
-        path.write_text(json.dumps(results["fusion"], indent=2) + "\n")
-        print(f"# wrote {path}", flush=True)
+        root = pathlib.Path(__file__).resolve().parent.parent
+        path = root / "BENCH_plcore.json"
+        latest = results["fusion"]
+        history = []
+        if path.exists():
+            try:
+                prev = json.loads(path.read_text())
+                history = prev.get("history", [])
+                if not history and "variants" in prev:
+                    # pre-history file: fold its latest run in so the
+                    # trajectory keeps the earliest data point
+                    history = [{"sha": None, "date": None, **prev}]
+            except Exception:
+                history = []
+        entry = {"sha": _git_sha(root),
+                 "date": time.strftime("%Y-%m-%d"), **latest}
+        doc = dict(latest)
+        doc["history"] = history + [entry]
+        path.write_text(json.dumps(doc, indent=2) + "\n")
+        print(f"# wrote {path} ({len(doc['history'])} history entries)",
+              flush=True)
 
 
 if __name__ == "__main__":

@@ -13,7 +13,9 @@ python -m pytest -x -q
 echo "== model-zoo smoke =="
 python scripts/smoke_check.py
 
-echo "== plcore pipeline benchmark (tiny smoke) =="
-BENCH_PLCORE_HW=16 python -m benchmarks.run fusion
+echo "== plcore pipeline benchmark (tiny smoke; two_pass_fused gate) =="
+# ENFORCE makes the run fail if the one-kernel two_pass_fused variant
+# regresses below single_dispatch throughput on the same run
+BENCH_PLCORE_HW=16 BENCH_PLCORE_ENFORCE=1 python -m benchmarks.run fusion
 
 echo "CI OK"

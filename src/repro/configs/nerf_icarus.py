@@ -41,6 +41,12 @@ class NerfConfig:
     # remaining transmittance T < ert_eps skip the fine-pass MLP and keep the
     # coarse color. 0.0 disables (exact two-pass render).
     ert_eps: float = 0.0
+    # per-ray ERT compaction granularity inside the one-kernel two-pass
+    # path: alive rays are gathered to the tile front and the fine MLP runs
+    # in chunks of this many rays, skipping chunks past the alive count
+    # (rounded to the largest multiple of 8 dividing the ray tile; smaller
+    # chunks skip more dead work but pay more per-chunk dispatch overhead)
+    ert_chunk_rows: int = 64
     image_hw: Tuple[int, int] = (800, 800)
     dtype: str = "float32"
     # §Perf lever: MLP-engine activation dtype. The VRU always integrates

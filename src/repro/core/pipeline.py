@@ -16,7 +16,14 @@ call. This module is the weight-stationary restatement:
   coarse -> importance -> fine two-pass chain; no per-tile host round
   trip, no per-call retrace (compiled programs are cached per
   (config, flags) and re-specialized per shape by jit). Ray buffers are
-  donated to the program on backends that support donation.
+  donated to the program on non-CPU backends — ``_donating_jit`` resolves
+  donation by argument name for every pipeline program.
+* ``fuse_two_pass`` — with ``use_kernel`` this drops the chain one level
+  further: the coarse pass, the in-VMEM importance resample AND the fine
+  pass run inside ONE Pallas kernel per ray tile
+  (kernels/fused_plcore.two_pass_plcore_call), so coarse weights never
+  round-trip through HBM between the passes; with ``ert_eps > 0`` the
+  kernel also compacts alive rays so mixed tiles skip fine-MLP work.
 * Early ray termination (Cicero, arXiv 2404.11852): with ``ert_eps > 0``
   rays whose transmittance after the coarse pass fell below the threshold
   keep the coarse color and skip the fine-pass MLP — a real
@@ -44,13 +51,21 @@ _IMAGE_JITS: dict = {}
 _RAY_JITS: dict = {}
 
 
-def _donate_args():
-    """Buffer donation is a no-op (warning) on CPU; enable elsewhere."""
-    return (3, 4) if jax.default_backend() != "cpu" else ()
+def _donating_jit(fn, donate_names=()):
+    """jit with donation resolved from ``fn``'s signature BY ARGUMENT NAME —
+    the one place the pipeline decides what to donate, so no program
+    hardcodes positional indices. Donation is a no-op (warning) on CPU;
+    enabled on every other backend."""
+    if not donate_names or jax.default_backend() == "cpu":
+        return jax.jit(fn)
+    import inspect
+    pos = {n: i for i, n in enumerate(inspect.signature(fn).parameters)}
+    return jax.jit(fn, donate_argnums=tuple(pos[n] for n in donate_names))
 
 
-def _image_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float):
-    key = (cfg, use_kernel, float(ert_eps))
+def _image_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
+              fuse_two_pass: bool = False):
+    key = (cfg, use_kernel, float(ert_eps), fuse_two_pass)
     fn = _IMAGE_JITS.get(key)
     if fn is None:
         def run(params, quant, packed, o_tiles, d_tiles):
@@ -58,25 +73,32 @@ def _image_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float):
                 o, d = od
                 out = plcore.render_rays(
                     cfg, params, o, d, quant=quant, packed=packed,
-                    use_kernel=use_kernel, ert_eps=ert_eps, white_bkgd=True)
+                    use_kernel=use_kernel, fuse_two_pass=fuse_two_pass,
+                    ert_eps=ert_eps, white_bkgd=True)
                 return out["rgb"]
             return jax.lax.map(tile, (o_tiles, d_tiles))
 
-        fn = jax.jit(run, donate_argnums=_donate_args())
+        fn = _donating_jit(run, ("o_tiles", "d_tiles"))
         _IMAGE_JITS[key] = fn
     return fn
 
 
-def _ray_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float):
-    key = (cfg, use_kernel, float(ert_eps))
+def _ray_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
+            fuse_two_pass: bool = False):
+    # NOTE donation contract: on non-CPU backends the rays_o/rays_d
+    # buffers are CONSUMED by the program (standard jax donation) — the
+    # serving loop hands each ray batch over and never reuses it. Callers
+    # that cache a ray grid across calls must pass a fresh copy.
+    key = (cfg, use_kernel, float(ert_eps), fuse_two_pass)
     fn = _RAY_JITS.get(key)
     if fn is None:
         def run(params, quant, packed, rays_o, rays_d, k):
             return plcore.render_rays(
                 cfg, params, rays_o, rays_d, k, quant=quant, packed=packed,
-                use_kernel=use_kernel, ert_eps=ert_eps, white_bkgd=True)
+                use_kernel=use_kernel, fuse_two_pass=fuse_two_pass,
+                ert_eps=ert_eps, white_bkgd=True)
 
-        fn = jax.jit(run)
+        fn = _donating_jit(run, ("rays_o", "rays_d"))
         _RAY_JITS[key] = fn
     return fn
 
@@ -85,6 +107,7 @@ def render_image_single(cfg: NerfConfig, params, rays_o, rays_d, *,
                         quant: Optional[dict] = None,
                         packed: Optional[dict] = None,
                         use_kernel: bool = False,
+                        fuse_two_pass: bool = False,
                         rays_per_batch: int = 4096,
                         ert_eps: Optional[float] = None) -> jnp.ndarray:
     """One-dispatch full-image render. rays: (H, W, 3) -> rgb (H, W, 3)."""
@@ -92,7 +115,7 @@ def render_image_single(cfg: NerfConfig, params, rays_o, rays_d, *,
     eps = cfg.ert_eps if ert_eps is None else float(ert_eps)
     o_tiles, d_tiles, n = plcore.flatten_pad_rays(rays_o, rays_d,
                                                   rays_per_batch)
-    fn = _image_fn(cfg, use_kernel, eps)
+    fn = _image_fn(cfg, use_kernel, eps, fuse_two_pass)
     rgb = fn(params, quant, packed, o_tiles, d_tiles)
     return rgb.reshape(-1, 3)[:n].reshape(H, W, 3)
 
@@ -108,11 +131,16 @@ class PackedPlcore:
 
     def __init__(self, cfg: NerfConfig, params: dict, *,
                  quant: Optional[dict] = None, use_kernel: bool = False,
+                 fuse_two_pass: bool = False,
                  ert_eps: Optional[float] = None):
+        if fuse_two_pass and not use_kernel:
+            raise ValueError("fuse_two_pass routes through the Pallas "
+                             "kernel — pass use_kernel=True")
         self.cfg = cfg
         self.params = params
         self.quant = quant
         self.use_kernel = use_kernel
+        self.fuse_two_pass = fuse_two_pass
         self.ert_eps = cfg.ert_eps if ert_eps is None else float(ert_eps)
         self.packed = None
         if use_kernel:
@@ -126,8 +154,11 @@ class PackedPlcore:
 
     def render_rays(self, rays_o, rays_d, key=None, *,
                     ert_eps: Optional[float] = None) -> dict:
+        """Render one ray batch. On non-CPU backends rays_o/rays_d are
+        DONATED to the program (the streaming-serving contract) — pass a
+        fresh batch (or an explicit copy) per call there."""
         eps = self.ert_eps if ert_eps is None else float(ert_eps)
-        fn = _ray_fn(self.cfg, self.use_kernel, eps)
+        fn = _ray_fn(self.cfg, self.use_kernel, eps, self.fuse_two_pass)
         return fn(self.params, self.quant, self.packed, rays_o, rays_d, key)
 
     def render_image(self, rays_o, rays_d, *, rays_per_batch: int = 4096,
@@ -135,5 +166,6 @@ class PackedPlcore:
         return render_image_single(
             self.cfg, self.params, rays_o, rays_d, quant=self.quant,
             packed=self.packed, use_kernel=self.use_kernel,
+            fuse_two_pass=self.fuse_two_pass,
             rays_per_batch=rays_per_batch,
             ert_eps=self.ert_eps if ert_eps is None else ert_eps)

@@ -65,6 +65,7 @@ def _eval_pass(cfg: NerfConfig, params, quant, rays_o, rays_d, t,
 def render_rays(cfg: NerfConfig, params: dict, rays_o, rays_d,
                 key: Optional[jax.Array] = None, *,
                 quant: Optional[dict] = None, use_kernel: bool = False,
+                fuse_two_pass: bool = False,
                 packed: Optional[dict] = None, ert_eps: float = 0.0,
                 white_bkgd: bool = True) -> dict:
     """Two-pass render (paper §5.1): n_coarse stratified + n_fine importance.
@@ -78,6 +79,10 @@ def render_rays(cfg: NerfConfig, params: dict, rays_o, rays_d,
     coarse color and are masked out of the fine-pass MLP; if the whole
     batch terminated the fine pass is skipped entirely (lax.cond — a real
     branch under the single-dispatch image scan).
+    fuse_two_pass (requires use_kernel, deterministic sampling): the whole
+    coarse -> importance -> fine chain runs as ONE Pallas kernel per ray
+    tile — coarse weights never leave VMEM, and with ert_eps > 0 the
+    kernel compacts alive rays so mixed tiles also skip fine-MLP work.
     """
     R = rays_o.shape[:-1]
     k1 = k2 = None
@@ -87,6 +92,24 @@ def render_rays(cfg: NerfConfig, params: dict, rays_o, rays_d,
     qf = (quant or {}).get("fine")
     pc = (packed or {}).get("coarse")
     pf = (packed or {}).get("fine")
+
+    if use_kernel and fuse_two_pass:
+        if key is not None:
+            raise ValueError("fuse_two_pass is the deterministic serving "
+                             "path — no sampling key")
+        from repro.kernels import ops as kops
+        if pc is None or pf is None:
+            pc = kops.stack_plcore_weights(cfg, params["coarse"], qc)
+            pf = kops.stack_plcore_weights(cfg, params["fine"], qf)
+        out = kops.fused_render_two_pass(
+            cfg, {"coarse": pc, "fine": pf}, rays_o, rays_d,
+            ert_eps=ert_eps)
+        rgb_f, rgb_c = out["rgb"], out["rgb_coarse"]
+        if white_bkgd:
+            rgb_f = volume.white_background(rgb_f, out["acc"])
+            rgb_c = volume.white_background(rgb_c, out["acc_coarse"])
+        return {"rgb": rgb_f, "rgb_coarse": rgb_c, "depth": out["depth"],
+                "acc": out["acc"]}
 
     # ---- pass 1: coarse --------------------------------------------------
     t_c = sampling.stratified(cfg.near, cfg.far, cfg.n_coarse, R, k1)

@@ -9,6 +9,15 @@ surface of the object."
 ``importance``  — pass 2: inverse-CDF resampling of the coarse volume-
                   rendering weights (NeRF's sample_pdf), deterministic
                   midpoint mode for inference.
+
+The deterministic variant is factored into a kernel-shareable form so the
+fused two-pass PLCore kernel (kernels/fused_plcore.py) can run the exact
+same resample in VMEM: ``importance_det`` restates ``searchsorted`` as a
+comparison-count reduction and every gather as a one-hot contraction —
+ops Mosaic can lower, bit-identical to the host path — and
+``merge_sorted_ranks`` merges two sorted sample sets by rank arithmetic
+instead of ``jnp.sort``. Both paths share ``_weights_to_cdf``/``det_u``
+so the CDF and the u-grid cannot drift apart.
 """
 from __future__ import annotations
 
@@ -34,6 +43,21 @@ def stratified(near: float, far: float, n: int, shape=(),
     return near + (far - near) * s
 
 
+def det_u(n: int):
+    """The deterministic (inference-mode) u-grid, shared verbatim by the
+    host sampler and the fused kernel's in-VMEM resampler."""
+    return jnp.linspace(0.0, 1.0 - 1e-6, n)
+
+
+def _weights_to_cdf(weights, eps: float = 1e-5):
+    """Coarse weights (..., M) -> CDF over the M-1 interior bins (..., M-1);
+    pdf over the intervals between midpoints (drop edge weights, as NeRF)."""
+    w = weights[..., 1:-1] + eps
+    pdf = w / jnp.sum(w, axis=-1, keepdims=True)
+    cdf = jnp.cumsum(pdf, axis=-1)
+    return jnp.concatenate([jnp.zeros_like(cdf[..., :1]), cdf], axis=-1)
+
+
 def importance(t_mid, weights, n: int, key: Optional[jax.Array] = None,
                eps: float = 1e-5):
     """Inverse-CDF sampling from piecewise-constant pdf over bins.
@@ -42,17 +66,12 @@ def importance(t_mid, weights, n: int, key: Optional[jax.Array] = None,
     weights: (..., M) coarse volume-rendering weights (bins = gaps between
     midpoints, M-1 intervals). Returns (..., n) new t values, sorted.
     """
-    # pdf over the M-1 intervals between midpoints (drop edge weights, as NeRF)
-    w = weights[..., 1:-1] + eps
-    pdf = w / jnp.sum(w, axis=-1, keepdims=True)
-    cdf = jnp.cumsum(pdf, axis=-1)
-    cdf = jnp.concatenate([jnp.zeros_like(cdf[..., :1]), cdf], axis=-1)  # (..., M-1)
+    cdf = _weights_to_cdf(weights, eps)
 
     if key is not None:
         u = jax.random.uniform(key, cdf.shape[:-1] + (n,))
     else:
-        u = jnp.linspace(0.0, 1.0 - 1e-6, n)
-        u = jnp.broadcast_to(u, cdf.shape[:-1] + (n,))
+        u = jnp.broadcast_to(det_u(n), cdf.shape[:-1] + (n,))
 
     idx = jnp.clip(jnp.searchsorted(cdf, u, side="right") - 1,
                    0, cdf.shape[-1] - 2) if cdf.ndim == 1 else \
@@ -75,9 +94,68 @@ def _batched_searchsorted(cdf, u):
                                     ).reshape(u.shape)
 
 
+def importance_det(t_mid, weights, n: int, eps: float = 1e-5):
+    """Kernel-shareable deterministic inverse-CDF: the exact math of
+    ``importance(key=None)`` restated without ``searchsorted`` /
+    ``take_along_axis`` (neither lowers inside a Pallas kernel).
+
+    ``searchsorted(cdf, u, side="right")`` is the count of CDF entries
+    <= u, so it becomes a comparison-count reduction; each gather becomes
+    a one-hot contraction (exactly one 1.0 per row, so the sum reproduces
+    the gathered value bit-for-bit). Bit-identical to the host path —
+    tests/test_two_pass_fused.py asserts it.
+    """
+    cdf = _weights_to_cdf(weights, eps)                       # (..., M-1)
+    M1 = cdf.shape[-1]
+    u = jnp.broadcast_to(det_u(n), cdf.shape[:-1] + (n,))
+    le = (cdf[..., None, :] <= u[..., :, None]).astype(jnp.int32)
+    idx = jnp.clip(jnp.sum(le, axis=-1) - 1, 0, M1 - 2)       # (..., n)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, idx.shape + (M1,), idx.ndim)
+    oh = (idx[..., None] == lanes).astype(t_mid.dtype)        # (..., n, M-1)
+
+    def take(v):          # v: (..., M-1) gathered at idx per output sample
+        return jnp.sum(oh * v[..., None, :], axis=-1)
+
+    cdf_lo = take(cdf)
+    # idx+1 <= M1-1, so gathering the left-shifted vector at idx never
+    # reads the (arbitrary) pad lane
+    cdf_hi = take(jnp.concatenate([cdf[..., 1:], cdf[..., -1:]], axis=-1))
+    t_lo = take(t_mid[..., :-1])
+    t_hi = take(t_mid[..., 1:])
+    denom = jnp.where(cdf_hi - cdf_lo < 1e-8, 1.0, cdf_hi - cdf_lo)
+    frac = (u - cdf_lo) / denom
+    return t_lo + frac * (t_hi - t_lo)
+
+
 def merge_sorted(t_a, t_b):
     """Union of two sample sets along a ray, sorted (coarse + fine pass)."""
     return jnp.sort(jnp.concatenate([t_a, t_b], axis=-1), axis=-1)
+
+
+def merge_sorted_ranks(t_a, t_b):
+    """Kernel-shareable ``merge_sorted`` for two already-sorted sets: the
+    merged position of each element is its own index plus the count of
+    elements of the OTHER set strictly before it (ties break a-first, and
+    in-set ties break by index, so every rank is distinct) — a comparison
+    count plus a one-hot scatter instead of ``jnp.sort``. Same values as
+    the sort-based merge for sorted inputs.
+    """
+    na, nb = t_a.shape[-1], t_b.shape[-1]
+    T = na + nb
+    ia = jax.lax.broadcasted_iota(jnp.int32, t_a.shape, t_a.ndim - 1)
+    ib = jax.lax.broadcasted_iota(jnp.int32, t_b.shape, t_b.ndim - 1)
+    lt = (t_b[..., None, :] < t_a[..., :, None]).astype(jnp.int32)
+    rank_a = ia + jnp.sum(lt, axis=-1)                        # (..., na)
+    le = (t_a[..., None, :] <= t_b[..., :, None]).astype(jnp.int32)
+    rank_b = ib + jnp.sum(le, axis=-1)                        # (..., nb)
+    lanes_a = jax.lax.broadcasted_iota(jnp.int32, rank_a.shape + (T,),
+                                       rank_a.ndim)
+    lanes_b = jax.lax.broadcasted_iota(jnp.int32, rank_b.shape + (T,),
+                                       rank_b.ndim)
+    oh_a = (rank_a[..., None] == lanes_a).astype(t_a.dtype)   # (..., na, T)
+    oh_b = (rank_b[..., None] == lanes_b).astype(t_b.dtype)   # (..., nb, T)
+    return (jnp.sum(oh_a * t_a[..., None], axis=-2)
+            + jnp.sum(oh_b * t_b[..., None], axis=-2))
 
 
 def deltas_from_t(t, far_cap: float = 1e10):

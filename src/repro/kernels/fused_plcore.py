@@ -1,40 +1,56 @@
-"""Fused PLCore Pallas kernel — the whole NeRF pipeline in ONE kernel
+"""Fused PLCore Pallas kernels — the whole NeRF pipeline in ONE kernel
 (paper C1: "a PLCore takes in positions & directions and renders the
 corresponding pixel colors without any intermediate data going off-chip").
 
-TPU restatement: grid over ray tiles; per grid step the kernel
-  1. reconstructs sample positions from the ray parametrization
-     (rays_o + t * rays_d) — rays cross HBM, not the 192x-larger sample
-     cloud;
-  2. runs the PEU with the paper's double-angle recurrence (sin/cos of
-     octave k+1 from octave k: 2 muls + 1 add, one transcendental pair
-     total — §4.2);
-  3. runs every MLP layer MXU-shaped out of VMEM-resident weights
-     (weight-stationary across all grid steps = the paper's
-     batch-computing, C6); optionally dequantizing RMCM 9-bit weights
-     in-register (C2);
-  4. volume-renders with the VRU transmittance math in closed parallel-
-     prefix form — T = exp(cumsum(x)) exclusive-shifted, w_i = T_i - T_{i+1}
-     (algebraically the eq. (5) recurrence, but N-parallel instead of N
-     serial steps; the same form as core.volume.render_parallel);
-  5. writes only pixel colors + per-sample weights (the latter feed the
-     two-pass importance sampler) back to HBM.
+Two kernels share one pass body (``_pass_body``: PEU double-angle
+recurrence -> MLP engine out of VMEM-resident weights, RMCM 9-bit
+dequantized in-register -> VRU in closed parallel-prefix form):
 
-Early ray termination (Cicero-style): an optional per-ray ``alive`` mask —
-when no ray in a grid tile is alive the whole MLP+VRU body is skipped via
-``pl.when`` and zeros are written (the caller keeps the coarse color for
-dead rays). With spatially coherent ray tiles this drops entire
-background/terminated tiles from the fine pass.
+* ``fused_plcore_call`` — ONE sample set per call. Two of these per ray
+  tile make the two-dispatch coarse/fine chain: the regression oracle,
+  kept because the coarse weights it writes to HBM are exactly what the
+  single-dispatch kernel must reproduce internally.
+* ``two_pass_plcore_call`` — the paper's C1 restated literally: one
+  ``pallas_call`` per ray tile runs coarse MLP+VRU, the deterministic
+  inverse-CDF importance resample (the kernel-shareable forms in
+  ``core.sampling``: ``importance_det`` + ``merge_sorted_ranks`` — the
+  same code the host path tests against), then the fine MLP+VRU and the
+  final composite. Coarse weights, sample positions and every activation
+  stay in VMEM.
 
-HBM traffic per tile: rays in (rt x ~8 floats), pixels out (rt x 3) + the
-coarse-pass weights (rt x N) — vs. the unfused pipeline's O(rt x N x
-(63 + 27 + 4 x 256)) intermediate tensors. benchmarks/plcore_fusion.py
-quantifies it.
+Per-ray early termination (Cicero, arXiv 2404.11852) inside the two-pass
+kernel: after the coarse VRU, rays with transmittance < ert_eps are
+*compacted* — a prefix-sum rank over the alive mask builds a permutation
+(applied as a one-hot matmul) that gathers alive rays to the front of the
+tile, and the fine-pass MLP then runs chunk-by-chunk over that dense
+prefix, each chunk guarded by ``n_alive > chunk_start``. Mixed tiles —
+not just all-dead ones — skip fine-pass work proportional to their dead
+fraction, at ``cfg.ert_chunk_rows`` granularity; dead rays keep the
+coarse color/acc/depth.
 
-VMEM: all weights (~1.19M params = 4.8 MB f32, 1.3 MB RMCM-packed) + a
-(rt*N, P) activation slab; ops.py picks rt so weights AND slab together
-fit the budget set by ``NerfConfig.kernel_vmem_budget_mb`` (default
-16 MB — one TPU v4/v5 core's VMEM).
+HBM traffic per ray (f32 words), N = n_coarse + n_fine samples:
+
+  path                      in                       out
+  ------------------------  -----------------------  -------------------
+  unfused (Fig. 2a GPU)     rays (6) + t (N)         per-sample acts
+                                                     O(N * (63+27+4*256))
+  two-dispatch fused        rays (12) + t (N + Nc)   rgb+w+acc twice:
+                            + w_c re-read (Nc)       (3 + N) + (3 + Nc) + 2
+  two_pass (this kernel)    rays (6); t_c is one     rgb (3) + rgb_c (3)
+                            pinned (1, Nc) row       + acc, acc_c, depth (3)
+
+VMEM budget (``ops.pick_ray_tile_two_pass``): BOTH networks' weight
+stacks stay resident every grid step (2x the single-pass footprint,
+~7.3 MB f32 at full scale) and the per-ray scratch adds the fine slab
+(N x P), the resample one-hot (n_fine x (n_coarse-1)) and the rank-merge
+scatter one-hots (N x N); rt is sized so weights + scratch fit
+``NerfConfig.kernel_vmem_budget_mb`` (default 16 MB — one TPU v4/v5
+core's VMEM).
+
+Off-TPU, ``two_pass_plcore_call`` runs the same tile body through a
+``lax.map`` grid emulator instead of the Pallas interpreter (identical
+semantics, parity-tested; ERT's lax.cond chunk skips stay runtime-real)
+— benchmarks/plcore_fusion.py measures the chain through it.
 """
 from __future__ import annotations
 
@@ -46,6 +62,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.configs.nerf_icarus import NerfConfig
+from repro.core import sampling
 from repro.kernels.rmcm_matmul import _unpack_signs
 
 
@@ -61,89 +78,131 @@ def _pe_double_angle(x, n_freqs: int):
     return jnp.concatenate(feats, axis=-1)
 
 
-def _make_kernel(cfg: NerfConfig, rt: int, N: int, P: int, P2: int,
-                 quantized: bool, ert: bool):
-    W, C = cfg.trunk_width, cfg.color_width
+def _dq(mag, sgn_bits, scale, rows_padded):
+    m = mag.astype(jnp.float32)
+    sg = _unpack_signs(sgn_bits, rows_padded).astype(jnp.float32)
+    return m * (1.0 - 2.0 * sg) * scale
+
+
+def _weight_order(quantized: bool):
+    """stack_plcore_weights key order as the kernel receives the refs."""
+    if quantized:
+        return ["trunk_mag", "trunk_sgn", "trunk_scl", "trunk_b",
+                "sigma_w", "sigma_b", "feat_mag", "feat_sgn", "feat_scl",
+                "feat_b", "color0_mag", "color0_sgn", "color0_scl",
+                "color0_b", "rgb_w", "rgb_b"]
+    return ["trunk_w", "trunk_b", "sigma_w", "sigma_b", "feat_w", "feat_b",
+            "color0_w", "color0_b", "rgb_w", "rgb_b"]
+
+
+def _net_arrays(cfg: NerfConfig, refs, quantized: bool, P: int, P2: int):
+    """Read one network's weight refs into dense f32 arrays (RMCM layers
+    dequantized in-register ONCE per kernel body, however many chunks the
+    fine pass later splits into)."""
+    W = cfg.trunk_width
+    if quantized:
+        (tw_mag, tw_sgn, tw_scl, tb, sw, sb, fw_mag, fw_sgn, fw_scl, fb,
+         cw_mag, cw_sgn, cw_scl, cb, rw, rb) = refs
+        tw = [_dq(tw_mag[i], tw_sgn[i], tw_scl[i], P)
+              for i in range(cfg.trunk_layers)]
+        fw = _dq(fw_mag[...], fw_sgn[...], fw_scl[...], W)
+        cw = _dq(cw_mag[...], cw_sgn[...], cw_scl[...], P2)
+        return (tw, tb, sw, sb, fw, fb, cw, cb, rw, rb)
+    (tw, tb, sw, sb, fw, fb, cw, cb, rw, rb) = refs
+    return ([tw[i] for i in range(cfg.trunk_layers)], tb, sw, sb,
+            fw[...], fb, cw[...], cb, rw, rb)
+
+
+def _pass_body(cfg: NerfConfig, rt: int, N: int, net, o, d, ts, deltas,
+               ped=None):
+    """One full PEU -> MLP -> VRU pass over a (rt, N) sample set with
+    already-materialized rays/weights. Returns (rgb_pix (rt, 3),
+    w (rt, N), T_next (rt, N)); acc = 1 - T_next[:, -1]. ``ped``: the
+    per-ray direction encoding, precomputable once when several passes
+    share the same rays (the two-pass kernel encodes directions ONCE
+    where the host path does it per pass)."""
+    tw, tb, sw, sb, fw, fb, cw, cb, rw, rb = net
+    W = cfg.trunk_width
     pe_dim, de_dim = cfg.pos_enc_dim, cfg.dir_enc_dim
     T = rt * N
 
-    def _dq(mag, sgn_bits, scale, rows_padded):
-        m = mag.astype(jnp.float32)
-        sg = _unpack_signs(sgn_bits, rows_padded).astype(jnp.float32)
-        return m * (1.0 - 2.0 * sg) * scale
+    # ---- positions & PEU (double-angle) --------------------------------
+    pts = (o[:, None, :] + ts[..., None] * d[:, None, :]).reshape(T, 3)
+    pe = _pe_double_angle(pts, cfg.pos_freqs)          # (T, pe_dim)
+    if ped is None:
+        dn = d * jax.lax.rsqrt(jnp.sum(d * d, -1, keepdims=True))
+        ped = _pe_double_angle(dn, cfg.dir_freqs)      # (rt, de_dim)
+
+    # ---- MLP engine (MONB) ---------------------------------------------
+    # skip layers run as SPLIT matmuls (h @ W_h + pe @ W_pe == the concat
+    # matmul without materializing the (T, W+pe) buffer — same trick as
+    # core.mlp._matmul_split)
+    h = pe
+    for i in range(cfg.trunk_layers):
+        if i == 0:
+            h = jax.nn.relu(
+                jnp.dot(pe, tw[i][:pe_dim],
+                        preferred_element_type=jnp.float32) + tb[i])
+        elif i in cfg.skip_at:
+            h = jax.nn.relu(
+                jnp.dot(h, tw[i][:W], preferred_element_type=jnp.float32)
+                + jnp.dot(pe, tw[i][W:W + pe_dim],
+                          preferred_element_type=jnp.float32) + tb[i])
+        else:
+            h = jax.nn.relu(
+                jnp.dot(h, tw[i][:W],
+                        preferred_element_type=jnp.float32) + tb[i])
+
+    # ---- heads: sigma (SONB, exact), feature, color branch -------------
+    # sigma and feat both read h: ONE fused (W, 1+W) matmul instead of a
+    # gemv + a gemm (one pass over the (T, W) activations)
+    sfw = jnp.concatenate([sw[...], fw], axis=-1)      # (W, 1+W)
+    sf = jnp.dot(h, sfw, preferred_element_type=jnp.float32)
+    sigma = sf[:, 0] + sb[...][0]
+    feat = sf[:, 1:] + fb[...]
+    # split color matmul: the direction part is PER-RAY (rt rows), not
+    # per-sample — N x less work than the (T, W+de) concat matmul
+    C = cw.shape[-1]
+    colf = jnp.dot(feat, cw[:W], preferred_element_type=jnp.float32)
+    cold = jnp.dot(ped, cw[W:W + de_dim],
+                   preferred_element_type=jnp.float32)  # (rt, C)
+    hc = jax.nn.relu(
+        (colf.reshape(rt, N, C) + cold[:, None, :]).reshape(T, C)
+        + cb[...])
+    raw = (jnp.dot(hc, rw[...], preferred_element_type=jnp.float32)
+           + rb[...])
+    rgb = jax.nn.sigmoid(raw).reshape(rt, N, 3)
+
+    # ---- VRU: closed-form parallel prefix ------------------------------
+    # T_{i+1} = exp(cumsum_{j<=i} x_j); T_0 = 1; w_i = T_i - T_{i+1}.
+    # Same math as eq.(5)'s recurrence, but one vectorized cumsum
+    # instead of N serial steps with a dynamic_update_slice each.
+    x = -(jnp.maximum(sigma, 0.0).reshape(rt, N)) * deltas
+    T_next = jnp.exp(jnp.cumsum(x, axis=-1))           # (rt, N): T_{i+1}
+    T_i = jnp.concatenate([jnp.ones((rt, 1), jnp.float32),
+                           T_next[:, :-1]], axis=-1)
+    w = T_i - T_next
+    accum = jnp.sum(w[..., None] * rgb, axis=1)        # (rt, 3)
+    return accum, w, T_next
+
+
+def _make_kernel(cfg: NerfConfig, rt: int, N: int, P: int, P2: int,
+                 quantized: bool, ert: bool):
+    nw = len(_weight_order(quantized))
 
     def kernel(o_ref, d_ref, t_ref, dl_ref, *refs):
         if ert:
             alive_ref, refs = refs[0], refs[1:]
-        if quantized:
-            (tw_mag, tw_sgn, tw_scl, tb, sw, sb, fw_mag, fw_sgn, fw_scl, fb,
-             cw_mag, cw_sgn, cw_scl, cb, rw, rb,
-             rgb_o, w_o, acc_o) = refs
-        else:
-            (tw, tb, sw, sb, fw, fb, cw, cb, rw, rb,
-             rgb_o, w_o, acc_o) = refs
+        wrefs = refs[:nw]
+        rgb_o, w_o, acc_o = refs[nw:]
 
         def compute():
+            net = _net_arrays(cfg, wrefs, quantized, P, P2)
             o = o_ref[...].astype(jnp.float32)             # (rt, 3)
             d = d_ref[...].astype(jnp.float32)             # (rt, 3)
             ts = t_ref[...].astype(jnp.float32)            # (rt, N)
-
-            # ---- positions & PEU (double-angle) ------------------------
-            pts = (o[:, None, :] + ts[..., None] * d[:, None, :]).reshape(T, 3)
-            pe = _pe_double_angle(pts, cfg.pos_freqs)      # (T, pe_dim)
-            dn = d * jax.lax.rsqrt(jnp.sum(d * d, -1, keepdims=True))
-            ped = _pe_double_angle(dn, cfg.dir_freqs)      # (rt, de_dim)
-            ped_b = jnp.broadcast_to(ped[:, None, :],
-                                     (rt, N, de_dim)).reshape(T, de_dim)
-
-            # ---- MLP engine (MONB) --------------------------------------
-            def trunk_weight(i, rows):
-                if quantized:
-                    full = _dq(tw_mag[i], tw_sgn[i], tw_scl[i], P)
-                else:
-                    full = tw[i]
-                return full[:rows]
-
-            h = pe
-            for i in range(cfg.trunk_layers):
-                if i == 0:
-                    a, din = pe, pe_dim
-                elif i in cfg.skip_at:
-                    a, din = jnp.concatenate([h, pe], axis=-1), W + pe_dim
-                else:
-                    a, din = h, W
-                h = jax.nn.relu(
-                    jnp.dot(a, trunk_weight(i, din),
-                            preferred_element_type=jnp.float32) + tb[i])
-
-            # ---- heads: sigma (SONB, exact), feature, color branch ------
-            sigma = (jnp.dot(h, sw[...], preferred_element_type=jnp.float32)
-                     + sb[...])[:, 0]
-            if quantized:
-                fw_full = _dq(fw_mag[...], fw_sgn[...], fw_scl[...], W)
-                cw_full = _dq(cw_mag[...], cw_sgn[...], cw_scl[...], P2)
-            else:
-                fw_full, cw_full = fw[...], cw[...]
-            feat = (jnp.dot(h, fw_full, preferred_element_type=jnp.float32)
-                    + fb[...])
-            hc_in = jnp.concatenate([feat, ped_b], axis=-1)  # (T, W+de)
-            hc = jax.nn.relu(
-                jnp.dot(hc_in, cw_full[:W + de_dim],
-                        preferred_element_type=jnp.float32) + cb[...])
-            raw = (jnp.dot(hc, rw[...], preferred_element_type=jnp.float32)
-                   + rb[...])
-            rgb = jax.nn.sigmoid(raw).reshape(rt, N, 3)
-
-            # ---- VRU: closed-form parallel prefix -----------------------
-            # T_{i+1} = exp(cumsum_{j<=i} x_j); T_0 = 1; w_i = T_i - T_{i+1}.
-            # Same math as eq.(5)'s recurrence, but one vectorized cumsum
-            # instead of N serial steps with a dynamic_update_slice each.
-            x = -(jnp.maximum(sigma, 0.0).reshape(rt, N)) * dl_ref[...]
-            T_next = jnp.exp(jnp.cumsum(x, axis=-1))       # (rt, N): T_{i+1}
-            T_i = jnp.concatenate([jnp.ones((rt, 1), jnp.float32),
-                                   T_next[:, :-1]], axis=-1)
-            w = T_i - T_next
-            accum = jnp.sum(w[..., None] * rgb, axis=1)    # (rt, 3)
+            accum, w, T_next = _pass_body(cfg, rt, N, net, o, d, ts,
+                                          dl_ref[...])
             rgb_o[...] = accum.astype(rgb_o.dtype)
             w_o[...] = w.astype(w_o.dtype)
             acc_o[...] = (1.0 - T_next[:, -1]).astype(acc_o.dtype)
@@ -167,6 +226,11 @@ def _make_kernel(cfg: NerfConfig, rt: int, N: int, P: int, P2: int,
     return kernel
 
 
+def _pinned(a):  # whole tensor resident every grid step (weight-stationary)
+    nd = a.ndim
+    return pl.BlockSpec(a.shape, lambda i, nd=nd: (0,) * nd)
+
+
 def fused_plcore_call(cfg: NerfConfig, weights: dict, rays_o, rays_d, t,
                       deltas, *, rt: int, quantized: bool,
                       alive=None, interpret: bool = True):
@@ -184,22 +248,12 @@ def fused_plcore_call(cfg: NerfConfig, weights: dict, rays_o, rays_d, t,
     # must stay concrete
     P = -(-(cfg.trunk_width + cfg.pos_enc_dim) // 128) * 128
     P2 = -(-(cfg.trunk_width + cfg.dir_enc_dim) // 128) * 128
-    order = (["trunk_mag", "trunk_sgn", "trunk_scl", "trunk_b",
-              "sigma_w", "sigma_b", "feat_mag", "feat_sgn", "feat_scl",
-              "feat_b", "color0_mag", "color0_sgn", "color0_scl", "color0_b",
-              "rgb_w", "rgb_b"] if quantized else
-             ["trunk_w", "trunk_b", "sigma_w", "sigma_b", "feat_w", "feat_b",
-              "color0_w", "color0_b", "rgb_w", "rgb_b"])
-    w_arrays = [weights[k] for k in order]
+    w_arrays = [weights[k] for k in _weight_order(quantized)]
 
     grid = (R // rt,)
     ray_spec = pl.BlockSpec((rt, 3), lambda i: (i, 0))
     samp_spec = pl.BlockSpec((rt, N), lambda i: (i, 0))
     mask_spec = pl.BlockSpec((rt,), lambda i: (i,))
-
-    def pinned(a):  # whole tensor resident every grid step (weight-stationary)
-        nd = a.ndim
-        return pl.BlockSpec(a.shape, lambda i, nd=nd: (0,) * nd)
 
     out_shape = [jax.ShapeDtypeStruct((R, 3), jnp.float32),
                  jax.ShapeDtypeStruct((R, N), jnp.float32),
@@ -216,9 +270,211 @@ def fused_plcore_call(cfg: NerfConfig, weights: dict, rays_o, rays_d, t,
         grid=grid,
         in_specs=[ray_spec, ray_spec, samp_spec, samp_spec]
                  + ([mask_spec] if ert else [])
-                 + [pinned(a) for a in w_arrays],
+                 + [_pinned(a) for a in w_arrays],
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
     )(rays_o, rays_d, t, deltas, *mask_in, *w_arrays)
     return rgb, w, acc
+
+
+# --------------------------------------------------- one-kernel two-pass ----
+def _two_pass_tile(cfg: NerfConfig, rt: int, Nc: int, Nf: int,
+                   P: int, P2: int, qc: bool, qf: bool,
+                   ert_eps: float, chunk: int,
+                   o, d, t_row, cw_refs, fw_refs):
+    """The two-pass tile body: coarse -> in-VMEM importance resample ->
+    (ERT-compacted) fine -> composite, for one (rt,)-ray tile. Shared
+    VERBATIM by the Pallas kernel (whose refs index like arrays) and the
+    off-TPU lax.map grid emulator — the parity test in
+    tests/test_two_pass_fused.py holds the two executors together.
+    Returns (rgb, rgb_coarse, acc, acc_coarse, depth)."""
+    Nt = Nc + Nf
+    o = o.astype(jnp.float32)                          # (rt, 3)
+    d = d.astype(jnp.float32)                          # (rt, 3)
+    # deterministic coarse samples: one pinned (1, Nc) row, shared by
+    # every ray of every tile — the only non-ray tensor crossing HBM
+    t_c = jnp.broadcast_to(t_row.astype(jnp.float32), (rt, Nc))
+    dl_c = sampling.deltas_from_t(t_c)
+    # direction encoding is per-ray, not per-sample: encode ONCE and
+    # share it between the coarse and fine passes (the host path pays
+    # for it twice, once per _eval_pass)
+    dn = d * jax.lax.rsqrt(jnp.sum(d * d, -1, keepdims=True))
+    ped = _pe_double_angle(dn, cfg.dir_freqs)          # (rt, de_dim)
+
+    # ---- pass 1: coarse, entirely in VMEM -------------------------------
+    net_c = _net_arrays(cfg, cw_refs, qc, P, P2)
+    rgb_c, w_c, Tn_c = _pass_body(cfg, rt, Nc, net_c, o, d, t_c, dl_c, ped)
+    acc_c = 1.0 - Tn_c[:, -1]
+    depth_c = jnp.sum(w_c * t_c, axis=-1)
+
+    # ---- in-VMEM importance resample (w_c never leaves the chip) --------
+    t_f = sampling.importance_det(t_c, w_c, Nf)        # (rt, Nf)
+    t_all = sampling.merge_sorted_ranks(t_c, t_f)      # (rt, Nt)
+
+    net_f = _net_arrays(cfg, fw_refs, qf, P, P2)
+
+    def full_fine(_):
+        """Monolithic fine pass on the whole tile — one dense MLP."""
+        dl_all = sampling.deltas_from_t(t_all)
+        r, w, Tn = _pass_body(cfg, rt, Nt, net_f, o, d, t_all, dl_all, ped)
+        return jnp.concatenate(
+            [r, (1.0 - Tn[:, -1])[:, None],
+             jnp.sum(w * t_all, axis=-1)[:, None]], axis=-1)   # (rt, 5)
+
+    if ert_eps > 0.0:
+        alive = acc_c < 1.0 - ert_eps
+        af = alive.astype(jnp.float32)
+        n_alive = jnp.sum(af).astype(jnp.int32)
+
+        # ---- per-ray ERT compaction -------------------------------------
+        # alive rays move to the tile's front (stable prefix-sum rank,
+        # applied as ONE one-hot permutation matmul over the concatenated
+        # per-ray state); the fine MLP then runs chunk-by-chunk over the
+        # dense prefix, skipping every chunk past n_alive — a mostly-dead
+        # tile saves fine-MLP work proportional to its dead fraction.
+        def compacted_fine(_):
+            front = jnp.cumsum(af) - 1.0
+            back = jnp.sum(af) + jnp.cumsum(1.0 - af) - 1.0
+            dest = jnp.where(alive, front, back).astype(jnp.int32)
+            lanes = jax.lax.broadcasted_iota(jnp.int32, (rt, rt), 1)
+            perm = (dest[:, None] == lanes).astype(jnp.float32)
+            state = jnp.concatenate([o, d, t_all, ped], axis=-1)
+            state_p = jnp.dot(perm.T, state,
+                              preferred_element_type=jnp.float32)
+            o_p, d_p = state_p[:, :3], state_p[:, 3:6]
+            t_p = state_p[:, 6:6 + Nt]
+            ped_p = state_p[:, 6 + Nt:]
+            dl_p = sampling.deltas_from_t(t_p)
+
+            outs = []
+            for g in range(rt // chunk):
+                s0 = g * chunk
+                oc, dc = o_p[s0:s0 + chunk], d_p[s0:s0 + chunk]
+                tc_, dlc = t_p[s0:s0 + chunk], dl_p[s0:s0 + chunk]
+                pedc = ped_p[s0:s0 + chunk]
+
+                def live(_, oc=oc, dc=dc, tc_=tc_, dlc=dlc, pedc=pedc):
+                    r, w, Tn = _pass_body(cfg, chunk, Nt, net_f,
+                                          oc, dc, tc_, dlc, pedc)
+                    return jnp.concatenate(
+                        [r, (1.0 - Tn[:, -1])[:, None],
+                         jnp.sum(w * tc_, axis=-1)[:, None]], axis=-1)
+
+                def dead(_):
+                    return jnp.zeros((chunk, 5), jnp.float32)
+
+                outs.append(jax.lax.cond(n_alive > s0, live, dead, None))
+            fine_p = jnp.concatenate(outs, axis=0)         # (rt, 5)
+            # un-compact (perm is a permutation matrix: applying it
+            # un-transposed inverts the compaction gather above)
+            return jnp.dot(perm, fine_p,
+                           preferred_element_type=jnp.float32)
+
+        # Compaction costs a permutation and splits the fine MLP into
+        # chunk-sized matmuls, so engage it only when it can skip at
+        # least half the tile; mostly-alive tiles run the monolithic
+        # pass with zero ERT overhead (their dead rays still keep the
+        # coarse color via the select below).
+        fine = jax.lax.cond(n_alive > rt // 2, full_fine,
+                            compacted_fine, None)
+        rgb = jnp.where(alive[:, None], fine[:, :3], rgb_c)
+        acc = jnp.where(alive, fine[:, 3], acc_c)
+        depth = jnp.where(alive, fine[:, 4], depth_c)
+    else:
+        fine = full_fine(None)
+        rgb, acc, depth = fine[:, :3], fine[:, 3], fine[:, 4]
+    return rgb, rgb_c, acc, acc_c, depth
+
+
+def _make_two_pass_kernel(cfg: NerfConfig, rt: int, Nc: int, Nf: int,
+                          P: int, P2: int, qc: bool, qf: bool,
+                          ert_eps: float, chunk: int):
+    nwc = len(_weight_order(qc))
+    nwf = len(_weight_order(qf))
+
+    def kernel(o_ref, d_ref, tc_ref, *refs):
+        cw_refs = refs[:nwc]
+        fw_refs = refs[nwc:nwc + nwf]
+        rgb_o, rgbc_o, acc_o, accc_o, depth_o = refs[nwc + nwf:]
+        rgb, rgb_c, acc, acc_c, depth = _two_pass_tile(
+            cfg, rt, Nc, Nf, P, P2, qc, qf, ert_eps, chunk,
+            o_ref[...], d_ref[...], tc_ref[...], cw_refs, fw_refs)
+        rgb_o[...] = rgb.astype(rgb_o.dtype)
+        rgbc_o[...] = rgb_c.astype(rgbc_o.dtype)
+        acc_o[...] = acc.astype(acc_o.dtype)
+        accc_o[...] = acc_c.astype(accc_o.dtype)
+        depth_o[...] = depth.astype(depth_o.dtype)
+
+    return kernel
+
+
+def two_pass_plcore_call(cfg: NerfConfig, packed_c: dict, packed_f: dict,
+                         rays_o, rays_d, t_row, *, rt: int, ert_eps: float,
+                         chunk: int, interpret: bool = True,
+                         emulate_grid: Optional[bool] = None):
+    """ONE pallas_call per ray tile for the complete coarse -> importance
+    -> fine chain. rays: (R, 3) with R % rt == 0; t_row: (1, n_coarse)
+    deterministic coarse sample positions (identical for every ray —
+    inference mode). ``packed_c``/``packed_f``: stack_plcore_weights
+    layouts for the two networks, both pinned in VMEM simultaneously.
+
+    Off-TPU (``interpret=True``) the ray-tile grid runs by default
+    through a ``lax.map`` emulator over the SAME tile body instead of the
+    Pallas interpreter: identical semantics (held to fp32 tolerance by
+    the parity test — XLA compiles the shared jaxpr with different gemm
+    blocking in the two surroundings), without the interpreter's per-step
+    block machinery, and ERT's ``lax.cond`` chunk skips stay
+    runtime-real. Force the Pallas interpreter with
+    ``emulate_grid=False``.
+
+    Returns (rgb (R,3), rgb_coarse (R,3), acc (R,), acc_coarse (R,),
+    depth (R,)); the caller composites white background.
+    """
+    R = rays_o.shape[0]
+    Nc = t_row.shape[-1]
+    assert R % rt == 0, (R, rt)
+    assert ert_eps == 0.0 or rt % chunk == 0, (rt, chunk)
+    P = -(-(cfg.trunk_width + cfg.pos_enc_dim) // 128) * 128
+    P2 = -(-(cfg.trunk_width + cfg.dir_enc_dim) // 128) * 128
+    qc = "trunk_mag" in packed_c
+    qf = "trunk_mag" in packed_f
+    wc = [packed_c[k] for k in _weight_order(qc)]
+    wf = [packed_f[k] for k in _weight_order(qf)]
+
+    if emulate_grid is None:
+        emulate_grid = interpret
+    if emulate_grid:
+        def tile(od):
+            o_t, d_t = od
+            return _two_pass_tile(cfg, rt, Nc, cfg.n_fine, P, P2, qc, qf,
+                                  float(ert_eps), chunk,
+                                  o_t, d_t, t_row, wc, wf)
+        if R == rt:            # single-tile grid: no scan wrapper at all
+            return tile((rays_o, rays_d))
+        outs = jax.lax.map(tile, (rays_o.reshape(-1, rt, 3),
+                                  rays_d.reshape(-1, rt, 3)))
+        return tuple(x.reshape((R,) + x.shape[2:]) for x in outs)
+
+    grid = (R // rt,)
+    ray_spec = pl.BlockSpec((rt, 3), lambda i: (i, 0))
+    pix_spec = pl.BlockSpec((rt, 3), lambda i: (i, 0))
+    vec_spec = pl.BlockSpec((rt,), lambda i: (i,))
+    out_shape = [jax.ShapeDtypeStruct((R, 3), jnp.float32),
+                 jax.ShapeDtypeStruct((R, 3), jnp.float32),
+                 jax.ShapeDtypeStruct((R,), jnp.float32),
+                 jax.ShapeDtypeStruct((R,), jnp.float32),
+                 jax.ShapeDtypeStruct((R,), jnp.float32)]
+    out_specs = [pix_spec, pix_spec, vec_spec, vec_spec, vec_spec]
+
+    kernel = _make_two_pass_kernel(cfg, rt, Nc, cfg.n_fine, P, P2, qc, qf,
+                                   float(ert_eps), chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[ray_spec, ray_spec, _pinned(t_row)]
+                 + [_pinned(a) for a in wc] + [_pinned(a) for a in wf],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(rays_o, rays_d, t_row, *wc, *wf)

@@ -65,6 +65,18 @@ def pack_count() -> int:
     return _PACK_COUNT
 
 
+# Kernel-dispatch counter (same trace-time semantics as pack_count): each
+# pallas_call issued by the wrappers below ticks it once. The two-dispatch
+# coarse/fine chain ticks twice per render; the fused two-pass chain must
+# tick exactly ONCE — tests assert the C1 "one kernel per ray tile" claim
+# through this counter.
+_DISPATCH_COUNT = 0
+
+
+def dispatch_count() -> int:
+    return _DISPATCH_COUNT
+
+
 def stack_plcore_weights(cfg: NerfConfig, params: dict,
                          quant: Optional[dict] = None) -> dict:
     """Kernel weight layout: trunk stacked (L, P, W) with per-layer row
@@ -162,6 +174,8 @@ def fused_render(cfg: NerfConfig, params: Optional[dict], rays_o, rays_d, t,
     optional (R,) mask for Cicero-style early ray termination — all-dead
     kernel tiles skip MLP+VRU work.
     """
+    global _DISPATCH_COUNT
+    _DISPATCH_COUNT += 1
     it = interpret_default() if interpret is None else interpret
     R, N = t.shape
     rt = rt or pick_ray_tile(cfg, N, vmem_budget_bytes)
@@ -185,3 +199,82 @@ def fused_render(cfg: NerfConfig, params: Optional[dict], rays_o, rays_d, t,
         cfg, packed, rays_o, rays_d, t, deltas,
         rt=rt, quantized=quantized, alive=alive, interpret=it)
     return rgb[:R], {"weights": w[:R], "acc": acc[:R]}
+
+
+# ------------------------------------------------ one-kernel two-pass render --
+def pick_ray_tile_two_pass(cfg: NerfConfig,
+                           vmem_budget_bytes: Optional[int] = None) -> int:
+    """rt for the single-dispatch two-pass kernel: BOTH networks' weight
+    stacks stay resident every grid step (2x the one-pass footprint), and
+    the per-ray scratch adds the fine-pass activation slab ((Nc+Nf) x P)
+    plus the resample one-hot (Nf x (Nc-1)), the rank-merge scatter
+    one-hots ((Nc+Nf)^2) and the O(rt) compaction permutation."""
+    if vmem_budget_bytes is None:
+        vmem_budget_bytes = int(cfg.kernel_vmem_budget_mb * (1 << 20))
+    weights = 2 * plcore_weight_vmem_bytes(cfg)
+    slab = max(vmem_budget_bytes - weights, 1 << 18)
+    P = _rup(cfg.trunk_width + cfg.pos_enc_dim, 128)
+    Nt = cfg.n_coarse + cfg.n_fine
+    per_ray = 4 * (Nt * P                            # fine activation slab
+                   + cfg.n_fine * (cfg.n_coarse - 1)  # resample one-hot
+                   + Nt * Nt                         # rank-merge scatter
+                   + 512)                            # compaction row (rt<=512)
+    rt = max(8, (slab // per_ray) // 8 * 8)
+    # cap above the one-pass kernel's 128: the two-pass kernel amortizes
+    # its per-grid-step cost (both weight sets re-pinned, resample
+    # scratch) over the whole chain, so bigger tiles win when they fit.
+    # Powers of two only, so any pow2 ray batch is tiled without padding.
+    cap = 512
+    while cap > 8 and cap > rt:
+        cap //= 2
+    return cap
+
+
+def _ert_chunk(rt: int, want_rows: int) -> int:
+    """Largest multiple of 8 that divides rt and is <= want_rows — the
+    fixed-capacity granularity of the per-ray ERT compaction."""
+    c = max(8, (min(want_rows, rt) // 8) * 8)
+    while rt % c:
+        c -= 8
+    return max(c, 8)
+
+
+def fused_render_two_pass(cfg: NerfConfig, packed: dict, rays_o, rays_d, *,
+                          ert_eps: float = 0.0, rt: Optional[int] = None,
+                          vmem_budget_bytes: Optional[int] = None,
+                          interpret: Optional[bool] = None,
+                          emulate_grid: Optional[bool] = None) -> dict:
+    """The complete coarse -> importance -> fine render as ONE pallas_call
+    per ray tile (deterministic/inference sampling; coarse weights never
+    leave VMEM). ``packed``: {"coarse", "fine"} stack_plcore_weights
+    layouts. ``ert_eps`` > 0 enables per-ray early-termination compaction
+    inside the kernel. Returns {rgb, rgb_coarse, acc, acc_coarse, depth},
+    each trimmed to R rays; white background is the caller's composite.
+    """
+    global _DISPATCH_COUNT
+    _DISPATCH_COUNT += 1
+    it = interpret_default() if interpret is None else interpret
+    from repro.core import sampling
+    R = rays_o.shape[0]
+    if rt is None:
+        if it and emulate_grid is not False:
+            # the off-TPU lax.map emulator has no VMEM: the natural tile
+            # is the whole host batch (capped so activations stay sane)
+            rt = min(_rup(R, 8), 2048)
+        else:
+            rt = pick_ray_tile_two_pass(cfg, vmem_budget_bytes)
+    rt = min(rt, _rup(R, 8))
+    Rp = _rup(R, rt)
+    if Rp != R:
+        padn = Rp - R
+        rays_o = jnp.concatenate([rays_o, rays_o[-1:].repeat(padn, 0)])
+        rays_d = jnp.concatenate([rays_d, rays_d[-1:].repeat(padn, 0)])
+    # deterministic coarse samples are ray-independent: ship ONE row
+    t_row = sampling.stratified(cfg.near, cfg.far, cfg.n_coarse, (1,), None)
+    chunk = _ert_chunk(rt, cfg.ert_chunk_rows)
+    rgb, rgb_c, acc, acc_c, depth = _fp.two_pass_plcore_call(
+        cfg, packed["coarse"], packed["fine"], rays_o, rays_d, t_row,
+        rt=rt, ert_eps=float(ert_eps), chunk=chunk, interpret=it,
+        emulate_grid=emulate_grid)
+    return {"rgb": rgb[:R], "rgb_coarse": rgb_c[:R], "acc": acc[:R],
+            "acc_coarse": acc_c[:R], "depth": depth[:R]}

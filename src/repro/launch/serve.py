@@ -12,8 +12,13 @@ Two services:
 
   Flags: ``--rmcm`` serves through 9-bit RMCM weights; ``--kernel``
   routes the per-pass pipeline through the fused Pallas kernel;
+  ``--fuse-two-pass`` (with ``--kernel``) collapses the whole
+  coarse->importance->fine chain into ONE Pallas kernel per ray tile —
+  coarse weights never leave VMEM;
   ``--ert EPS`` enables Cicero-style early ray termination (rays whose
-  transmittance after the coarse pass is < EPS skip the fine-pass MLP);
+  transmittance after the coarse pass is < EPS skip the fine-pass MLP;
+  under ``--fuse-two-pass`` the kernel compacts alive rays so mixed ray
+  tiles also skip work);
   ``--vmem-budget-mb`` sizes the fused kernel's activation slab;
   ``--tiled`` falls back to the seed per-tile host loop (the benchmark
   baseline — see benchmarks/plcore_fusion.py for the measured gap).
@@ -98,12 +103,18 @@ def serve_nerf(args) -> dict:
         quant = {"coarse": rmcm.quantize_tree(params["coarse"]),
                  "fine": rmcm.quantize_tree(params["fine"])}
 
+    if args.fuse_two_pass and (args.tiled or not args.kernel):
+        raise SystemExit("--fuse-two-pass runs the whole chain in one "
+                         "Pallas kernel; it requires --kernel and the "
+                         "single-dispatch pipeline (drop --tiled)")
+
     # load-time work: RMCM quantization + kernel weight packing run ONCE
     # here; every render below reuses the packed layout
     engine = None
     if not args.tiled:
         engine = PackedPlcore(cfg, params, quant=quant,
-                              use_kernel=args.kernel)
+                              use_kernel=args.kernel,
+                              fuse_two_pass=args.fuse_two_pass)
     packs_at_load = kops.pack_count()
 
     scene = R.SCENES[args.scene]()
@@ -134,7 +145,9 @@ def serve_nerf(args) -> dict:
         "uj_per_sample_model_fused": nerf_energy_uj_per_sample(cfg, True),
         "uj_per_sample_model_unfused": nerf_energy_uj_per_sample(cfg, False),
         "rmcm": bool(args.rmcm), "kernel": bool(args.kernel),
-        "pipeline": "tiled" if args.tiled else "single_dispatch",
+        "pipeline": ("tiled" if args.tiled else
+                     "two_pass_fused" if args.fuse_two_pass else
+                     "single_dispatch"),
         "ert_eps": cfg.ert_eps,
         "weight_packs_since_load": kops.pack_count() - packs_at_load,
     }
@@ -200,6 +213,11 @@ def build_parser():
     ap.add_argument("--ert", type=float, default=0.0,
                     help="early-ray-termination transmittance threshold "
                          "(0 = exact two-pass render)")
+    ap.add_argument("--fuse-two-pass", action="store_true",
+                    help="run the whole coarse->importance->fine chain as "
+                         "ONE Pallas kernel per ray tile (requires "
+                         "--kernel; with --ert, compacts alive rays so "
+                         "mixed tiles skip fine-MLP work)")
     ap.add_argument("--tiled", action="store_true",
                     help="seed per-tile host loop instead of the "
                          "single-dispatch pipeline")

@@ -1,0 +1,249 @@
+"""One-kernel two-pass PLCore tests.
+
+The in-VMEM importance resampler must be BIT-identical to the host
+sampler (the kernel-shareable forms in core.sampling restate searchsorted
+/ gather / sort as comparison counts and one-hot contractions — exact
+arithmetic, not approximations); the fused chain must be one pallas_call
+(kernels.ops.dispatch_count) and match the two-dispatch kernel path; ERT
+compaction must be invisible for all-alive tiles, keep the coarse color
+for all-dead tiles, and match the reference renderer on mixed tiles.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.nerf_icarus import tiny
+from repro.core import sampling
+from repro.core.pipeline import PackedPlcore, render_image_single
+from repro.core.plcore import plcore_decls, render_rays
+from repro.data import rays as R
+from repro.kernels import ops as kops
+from repro.models.params import init_params
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny()
+    params = init_params(plcore_decls(cfg), jax.random.PRNGKey(0), "float32")
+    scene = R.blob_scene()
+    c2w = R.pose_spherical(30.0, -20.0, scene.radius)
+    ro, rd = R.camera_rays(c2w, 16, 16, 14.4)
+    return cfg, params, ro, rd
+
+
+# --------------------------------------- kernel-shareable sampling forms ----
+def test_importance_det_bitwise_matches_host():
+    """Comparison-count searchsorted + one-hot gathers == the
+    searchsorted/take_along_axis host path, bit for bit."""
+    k = jax.random.PRNGKey(7)
+    t_mid = jnp.sort(jax.random.uniform(k, (9, 17)), -1) * 4.0 + 2.0
+    w = jax.random.uniform(jax.random.PRNGKey(8), (9, 17))
+    a = sampling.importance(t_mid, w, 12, key=None)
+    b = sampling.importance_det(t_mid, w, 12)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # degenerate pdf (single hot bin -> duplicate samples) stays exact
+    w0 = jnp.zeros((4, 17)).at[:, 8].set(1.0)
+    np.testing.assert_array_equal(
+        np.asarray(sampling.importance(t_mid[:4], w0, 12, key=None)),
+        np.asarray(sampling.importance_det(t_mid[:4], w0, 12)))
+
+
+def test_merge_sorted_ranks_bitwise_matches_sort():
+    """Rank-merge (with in-set and cross-set ties) == jnp.sort merge."""
+    k = jax.random.PRNGKey(9)
+    # quantize to force duplicates within and across the two sets
+    t_a = jnp.sort(jnp.round(jax.random.uniform(k, (6, 10)) * 8) / 8, -1)
+    t_b = jnp.sort(jnp.round(
+        jax.random.uniform(jax.random.PRNGKey(10), (6, 14)) * 8) / 8, -1)
+    np.testing.assert_array_equal(
+        np.asarray(sampling.merge_sorted(t_a, t_b)),
+        np.asarray(sampling.merge_sorted_ranks(t_a, t_b)))
+
+
+# --------------------------------------------- one kernel, two passes -------
+def test_two_pass_is_one_dispatch(setup):
+    """The acceptance assertion: the fused chain issues exactly ONE
+    pallas_call where the coarse/fine chain issues two."""
+    cfg, params, ro, rd = setup
+    o, d = ro.reshape(-1, 3), rd.reshape(-1, 3)
+    n0 = kops.dispatch_count()
+    render_rays(cfg, params, o, d, use_kernel=True)
+    assert kops.dispatch_count() - n0 == 2
+    n1 = kops.dispatch_count()
+    render_rays(cfg, params, o, d, use_kernel=True, fuse_two_pass=True)
+    assert kops.dispatch_count() - n1 == 1
+
+
+def test_two_pass_matches_two_dispatch(setup):
+    """Same math, one dispatch: the in-VMEM resample chain must track the
+    two-dispatch kernel path within fp32 tolerance. The paths run the
+    same ops at different tile shapes, so matmul blocking reorders fp32
+    sums (~1e-7/op); the importance resampler amplifies that by shifting
+    fine sample positions — hence ~1e-3, like the existing cross-path
+    image test."""
+    cfg, params, ro, rd = setup
+    o, d = ro.reshape(-1, 3), rd.reshape(-1, 3)
+    a = render_rays(cfg, params, o, d, use_kernel=True)
+    b = render_rays(cfg, params, o, d, use_kernel=True, fuse_two_pass=True)
+    for key in ("rgb", "rgb_coarse", "acc"):
+        np.testing.assert_allclose(np.asarray(a[key]), np.asarray(b[key]),
+                                   atol=1e-3, err_msg=key)
+    # depth integrates t in [near, far] = [2, 6]: scale the tolerance
+    np.testing.assert_allclose(np.asarray(a["depth"]),
+                               np.asarray(b["depth"]), atol=1e-2)
+
+
+def test_grid_emulator_matches_pallas_interpret(setup):
+    """Off-TPU the two-pass grid runs through a lax.map emulator over the
+    same tile body; it must reproduce the Pallas interpreter within fp32
+    tolerance (same jaxpr compiled inside different surrounding programs,
+    so XLA's gemm blocking reorders fp32 sums; the resampler amplifies
+    those last-ulp diffs), with and without ERT compaction."""
+    cfg, params, ro, rd = setup
+    o, d = ro.reshape(-1, 3), rd.reshape(-1, 3)
+    packed = {n: kops.stack_plcore_weights(cfg, params[n], None)
+              for n in ("coarse", "fine")}
+    for eps in (0.0, 0.05):
+        a = kops.fused_render_two_pass(cfg, packed, o, d, ert_eps=eps,
+                                       emulate_grid=True)
+        b = kops.fused_render_two_pass(cfg, packed, o, d, ert_eps=eps,
+                                       emulate_grid=False)
+        for key in ("rgb", "rgb_coarse", "acc", "acc_coarse"):
+            np.testing.assert_allclose(np.asarray(a[key]),
+                                       np.asarray(b[key]), atol=1e-3,
+                                       err_msg=key)
+        np.testing.assert_allclose(np.asarray(a["depth"]),
+                                   np.asarray(b["depth"]), atol=1e-2)
+
+
+def test_two_pass_rejects_sampling_key(setup):
+    cfg, params, ro, rd = setup
+    o, d = ro.reshape(-1, 3), rd.reshape(-1, 3)
+    with pytest.raises(ValueError, match="deterministic"):
+        render_rays(cfg, params, o, d, jax.random.PRNGKey(0),
+                    use_kernel=True, fuse_two_pass=True)
+
+
+def test_two_pass_quantized_matches_two_dispatch(setup):
+    """RMCM 9-bit weights dequantize in-register in both kernels."""
+    from repro.core import rmcm
+    cfg, params, ro, rd = setup
+    o, d = ro.reshape(-1, 3), rd.reshape(-1, 3)
+    quant = {"coarse": rmcm.quantize_tree(params["coarse"]),
+             "fine": rmcm.quantize_tree(params["fine"])}
+    a = render_rays(cfg, params, o, d, quant=quant, use_kernel=True)
+    b = render_rays(cfg, params, o, d, quant=quant, use_kernel=True,
+                    fuse_two_pass=True)
+    np.testing.assert_allclose(np.asarray(a["rgb"]), np.asarray(b["rgb"]),
+                               atol=1e-3)
+
+
+def test_two_pass_image_pipeline_and_pack_once(setup):
+    """PackedPlcore(fuse_two_pass) serves through the cached image program
+    without re-packing, and matches the two-dispatch kernel image."""
+    cfg, params, ro, rd = setup
+    n0 = kops.pack_count()
+    pp = PackedPlcore(cfg, params, use_kernel=True, fuse_two_pass=True)
+    assert kops.pack_count() - n0 == 2          # coarse + fine, at load
+    img = pp.render_image(ro, rd, rays_per_batch=64)
+    pp.render_image(ro, rd, rays_per_batch=64)
+    assert kops.pack_count() - n0 == 2          # renders never re-pack
+    ref = render_image_single(cfg, params, ro, rd, use_kernel=True,
+                              rays_per_batch=64)
+    np.testing.assert_allclose(np.asarray(img), np.asarray(ref), atol=1e-3)
+
+
+def test_fuse_two_pass_requires_kernel(setup):
+    cfg, params, _, _ = setup
+    with pytest.raises(ValueError, match="use_kernel"):
+        PackedPlcore(cfg, params, fuse_two_pass=True)
+
+
+# ----------------------------------------------- per-ray ERT compaction ----
+def test_ert_all_alive_tile_matches_uncompacted(setup):
+    """When no ray terminates, ERT compaction must be invisible: any
+    compaction granularity renders bit-for-bit the same (every all-alive
+    tile takes the monolithic fine path), and the result matches the
+    ERT-off render to the last-ulp wobble of the lax.cond compilation
+    boundary."""
+    from dataclasses import replace
+    cfg, params, ro, rd = setup
+    o, d = ro.reshape(-1, 3), rd.reshape(-1, 3)
+    # empty the scene: sigma bias way down -> acc ~ 0 -> every ray alive
+    thin = jax.tree.map(lambda x: x, params)
+    thin["coarse"]["sigma"]["b"] = thin["coarse"]["sigma"]["b"] - 1e3
+    base = render_rays(cfg, thin, o, d, use_kernel=True, fuse_two_pass=True)
+    a = render_rays(cfg, thin, o, d, use_kernel=True, fuse_two_pass=True,
+                    ert_eps=1e-6)
+    # compaction granularity must be bit-for-bit invisible when all alive
+    cfg1 = replace(cfg, ert_chunk_rows=1024)
+    b = render_rays(cfg1, thin, o, d, use_kernel=True, fuse_two_pass=True,
+                    ert_eps=1e-6)
+    np.testing.assert_array_equal(np.asarray(a["rgb"]), np.asarray(b["rgb"]))
+    # vs ERT off: identical math, but the fine pass sits behind a lax.cond
+    # whose body XLA compiles separately -> last-ulp gemm-blocking wobble
+    np.testing.assert_allclose(np.asarray(base["rgb"]),
+                               np.asarray(a["rgb"]), atol=1e-5)
+
+
+def test_ert_all_dead_tile_keeps_coarse(setup):
+    """A wall of density kills every ray in the coarse pass: every fine
+    chunk is skipped and the output must be the coarse render, finite."""
+    cfg, params, _, _ = setup
+    o = jnp.zeros((64, 3)).at[:, 2].set(-4.0)
+    d = jnp.tile(jnp.array([[0.0, 0.0, 1.0]]), (64, 1))
+    dense = jax.tree.map(lambda x: x, params)
+    dense["coarse"]["sigma"]["b"] = dense["coarse"]["sigma"]["b"] + 1e4
+    out = render_rays(cfg, dense, o, d, use_kernel=True, fuse_two_pass=True,
+                      ert_eps=1e-3)
+    assert bool(jnp.all(jnp.isfinite(out["rgb"])))
+    np.testing.assert_allclose(np.asarray(out["rgb"]),
+                               np.asarray(out["rgb_coarse"]), atol=1e-6)
+
+
+def test_ert_mixed_tile_matches_reference(setup):
+    """Mixed alive/dead tiles: compaction must reproduce the reference
+    renderer (two-dispatch kernel ERT) — alive rays get the full fine
+    render, dead rays keep coarse."""
+    cfg, params, ro, rd = setup
+    o, d = ro.reshape(-1, 3), rd.reshape(-1, 3)
+    eps = 0.05
+    coarse_only = render_rays(cfg, params, o, d, use_kernel=True,
+                              fuse_two_pass=True)
+    alive = np.asarray(coarse_only["acc"]) < 1.0 - eps
+    assert 0 < alive.sum() < alive.size, "scene must mix alive and dead"
+    ref = render_rays(cfg, params, o, d, use_kernel=True, ert_eps=eps)
+    got = render_rays(cfg, params, o, d, use_kernel=True, fuse_two_pass=True,
+                      ert_eps=eps)
+    # same cross-tile-shape tolerances as test_two_pass_matches_two_dispatch
+    for key in ("rgb", "rgb_coarse", "acc"):
+        np.testing.assert_allclose(np.asarray(ref[key]),
+                                   np.asarray(got[key]), atol=1e-3,
+                                   err_msg=key)
+    np.testing.assert_allclose(np.asarray(ref["depth"]),
+                               np.asarray(got["depth"]), atol=1e-2)
+
+
+# ------------------------------------------------- two-pass VMEM sizing ----
+def test_two_pass_ray_tile_accounts_for_both_nets():
+    cfg = tiny()
+    # same budget: the two-pass kernel pins 2x the weights + bigger
+    # scratch, so its tile can never exceed the one-pass tile
+    budget = 1 << 21
+    tp = kops.pick_ray_tile_two_pass(cfg, vmem_budget_bytes=budget)
+    op = kops.pick_ray_tile(cfg, cfg.n_samples, vmem_budget_bytes=budget)
+    assert tp <= op
+    assert tp >= 8
+    # budget flows from the config knob
+    from dataclasses import replace
+    tight = replace(cfg, kernel_vmem_budget_mb=1.0)
+    assert (kops.pick_ray_tile_two_pass(tight)
+            == kops.pick_ray_tile_two_pass(cfg, vmem_budget_bytes=1 << 20))
+
+
+def test_ert_chunk_divides_tile():
+    assert kops._ert_chunk(128, 16) == 16
+    assert kops._ert_chunk(120, 16) == 8
+    assert kops._ert_chunk(8, 64) == 8
+    assert kops._ert_chunk(64, 1024) == 64
