@@ -3,12 +3,14 @@
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run table1     # one
 
-Prints ``name,us_per_call,derived`` CSV lines. The ``fusion`` suite also
+Prints ``name,us_per_call,derived`` CSV lines. The ``fusion`` suite
 persists its serving-pipeline comparison (seed tile loop vs single
-dispatch vs kernel paths: wall_s / rays_per_s / samples_per_s) as
-``BENCH_plcore.json`` at the repo root: the top-level fields are the
-LATEST run, and the append-only ``history`` list (git SHA, date,
-variants, speedups per entry) records every canonical-scale run so the
+dispatch vs kernel paths: wall_s / rays_per_s / samples_per_s), and the
+``serving`` suite its multi-tenant engine numbers (req/s, p50/p95/p99
+latency, dispatch savings, cache hit rate — under the ``serving`` key),
+into ``BENCH_plcore.json`` at the repo root: the top-level fields are
+the LATEST run, and the append-only ``history`` list (git SHA, date,
+plus whichever suites ran) records every canonical-scale run so the
 cross-PR perf trajectory survives re-runs instead of being overwritten.
 """
 from __future__ import annotations
@@ -32,12 +34,13 @@ def _git_sha(root: pathlib.Path):
 
 def main() -> None:
     from benchmarks import (fig8_rmcm_psnr, plcore_fusion, roofline,
-                            sampling_twopass, table1_energy)
+                            sampling_twopass, serving_engine, table1_energy)
     suites = {
         "table1": table1_energy.run,
         "fig8": fig8_rmcm_psnr.run,
         "sampling": sampling_twopass.run,
         "fusion": plcore_fusion.run,
+        "serving": serving_engine.run,
         "roofline": roofline.run,
     }
     pick = [a for a in sys.argv[1:] if not a.startswith("-")]
@@ -50,26 +53,41 @@ def main() -> None:
         if isinstance(out, dict):
             results[n] = out
         print(f"# suite {n} done in {time.time() - t0:.1f}s", flush=True)
-    # CI smoke runs (BENCH_PLCORE_HW) must not clobber the canonical
-    # cross-PR trajectory numbers with shrunken-scale timings
-    if "fusion" in results and os.environ.get("BENCH_PLCORE_HW") is None:
+    # CI smoke runs (BENCH_PLCORE_HW / BENCH_SERVING_*) must not clobber
+    # the canonical cross-PR trajectory numbers with shrunken-scale timings
+    smoke = any(os.environ.get(k) is not None
+                for k in ("BENCH_PLCORE_HW", "BENCH_SERVING_SCENES",
+                          "BENCH_SERVING_REQUESTS", "BENCH_SERVING_TILE"))
+    persist = {k: results[k] for k in ("fusion", "serving") if k in results}
+    if persist and not smoke:
         root = pathlib.Path(__file__).resolve().parent.parent
         path = root / "BENCH_plcore.json"
-        latest = results["fusion"]
-        history = []
+        prev, history = {}, []
         if path.exists():
             try:
                 prev = json.loads(path.read_text())
-                history = prev.get("history", [])
+                history = prev.pop("history", [])
                 if not history and "variants" in prev:
                     # pre-history file: fold its latest run in so the
                     # trajectory keeps the earliest data point
                     history = [{"sha": None, "date": None, **prev}]
             except Exception:
-                history = []
-        entry = {"sha": _git_sha(root),
-                 "date": time.strftime("%Y-%m-%d"), **latest}
-        doc = dict(latest)
+                prev, history = {}, []
+        # history entries carry ONLY what this run measured; the
+        # top-level latest doc updates per-suite (fusion fields at the
+        # top level, engine numbers under "serving") and keeps the other
+        # suite's previous latest
+        entry = {"sha": _git_sha(root), "date": time.strftime("%Y-%m-%d")}
+        doc = dict(prev)
+        if "fusion" in persist:
+            entry.update(persist["fusion"])
+            serving_prev = doc.get("serving")
+            doc = dict(persist["fusion"])
+            if serving_prev is not None:
+                doc["serving"] = serving_prev
+        if "serving" in persist:
+            entry["serving"] = persist["serving"]
+            doc["serving"] = persist["serving"]
         doc["history"] = history + [entry]
         path.write_text(json.dumps(doc, indent=2) + "\n")
         print(f"# wrote {path} ({len(doc['history'])} history entries)",

@@ -1,0 +1,103 @@
+"""Serving-engine benchmark: the multi-tenant request path end to end.
+
+Drives a fixed-seed closed-loop trace (N scenes, mixed resolutions)
+through ``repro.serving.RenderEngine`` and reports request throughput,
+p50/p95/p99 latency, the coalescing dispatch savings vs a
+request-at-a-time server, and the scene-cache hit rate — then renders
+the SAME trace request-by-request through ``PackedPlcore.render_image``
+as the sequential baseline, so the engine's scheduling win (not just the
+kernel's) is what the number isolates.
+
+``benchmarks/run.py serving`` lands the result in ``BENCH_plcore.json``'s
+append-only history next to the kernel variants, so the serving-layer
+trajectory is tracked across PRs like the kernel one. BENCH_SERVING_*
+env knobs shrink the run for CI smoke (which, like the fusion suite's
+BENCH_PLCORE_HW, skips persisting).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs.nerf_icarus import tiny
+from repro.core.pipeline import PackedPlcore
+from repro.core.plcore import plcore_decls
+from repro.models.params import init_params
+from repro.serving import RenderEngine, SceneCache
+from repro.serving import loadgen
+
+
+def run() -> dict:
+    n_scenes = int(os.environ.get("BENCH_SERVING_SCENES", "3"))
+    n_requests = int(os.environ.get("BENCH_SERVING_REQUESTS", "12"))
+    tile_rays = int(os.environ.get("BENCH_SERVING_TILE", "512"))
+    hw_mix = (16, 32)
+    cfg = tiny()
+    scene_ids = [f"scene{i}" for i in range(n_scenes)]
+    param_sets = {sid: init_params(plcore_decls(cfg), jax.random.PRNGKey(i),
+                                   "float32")
+                  for i, sid in enumerate(scene_ids)}
+
+    cache = SceneCache(lambda sid: PackedPlcore(cfg, param_sets[sid]),
+                       capacity_mb=256.0)
+    trace = loadgen.poisson_trace(n_requests, scene_ids, rate_rps=100.0,
+                                  hw_choices=hw_mix, seed=0)
+
+    # warm deterministically: touch EVERY scene (load + pack) and compile
+    # the tile + per-resolution image programs, then zero the cache
+    # counters so the measured run's hit rate describes the measured
+    # trace, not the warm-up
+    from repro.data import rays as R
+    warm_engine = RenderEngine(cache, tile_rays=tile_rays)
+    for sid in scene_ids:
+        warm_engine.submit(loadgen.poisson_trace(
+            1, [sid], rate_rps=1e3, hw_choices=hw_mix, seed=1)[0].request)
+    warm_engine.drain()
+    for hw in hw_mix:
+        ro_w, rd_w = R.camera_rays(R.pose_spherical(0.0, -25.0, 4.0),
+                                   hw, hw, 0.9 * hw)
+        cache.get(scene_ids[0]).render_image(
+            ro_w, rd_w, rays_per_batch=tile_rays).block_until_ready()
+    cache.hits = cache.misses = cache.evictions = 0
+
+    engine = RenderEngine(cache, tile_rays=tile_rays)
+    rep = loadgen.run_trace(engine, trace, mode="closed", concurrency=4)
+
+    # sequential request-at-a-time baseline over the same trace
+    t0 = time.perf_counter()
+    for item in trace:
+        req = item.request
+        c2w = R.pose_spherical(req.theta, req.phi, req.radius)
+        ro, rd = R.camera_rays(c2w, req.hw, req.hw, 0.9 * req.hw)
+        cache.get(req.scene_id).render_image(
+            ro, rd, rays_per_batch=tile_rays).block_until_ready()
+    seq_wall = time.perf_counter() - t0
+
+    out = {
+        "scenes": n_scenes, "requests": n_requests, "tile_rays": tile_rays,
+        "req_per_s": rep["req_per_s"], "rays_per_s": rep["rays_per_s"],
+        "latency_ms": rep["latency_ms"],
+        "dispatches": rep["engine"]["dispatches"],
+        "dispatch_baseline": rep["engine"]["dispatch_baseline"],
+        "dispatch_savings": rep["dispatch_savings"],
+        "cache_hit_rate": rep["cache"]["hit_rate"],
+        "sequential_wall_s": round(seq_wall, 4),
+        "engine_wall_s": rep["wall_s"],
+        "speedup_engine_vs_sequential": round(seq_wall / rep["wall_s"], 2)
+        if rep["wall_s"] else None,
+    }
+    emit("serving/req_per_s", 0.0, f"req_per_s={out['req_per_s']}")
+    emit("serving/latency_p50_ms", out["latency_ms"]["p50"],
+         f"p99={out['latency_ms']['p99']}")
+    emit("serving/dispatch_savings", 0.0,
+         f"{out['dispatches']}_vs_{out['dispatch_baseline']}")
+    emit("serving/speedup_vs_sequential", 0.0,
+         f"x{out['speedup_engine_vs_sequential']}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -24,6 +24,10 @@ call. This module is the weight-stationary restatement:
   (kernels/fused_plcore.two_pass_plcore_call), so coarse weights never
   round-trip through HBM between the passes; with ``ert_eps > 0`` the
   kernel also compacts alive rays so mixed tiles skip fine-MLP work.
+* ``PackedPlcore.render_tile`` — the tile-stream entry point for the
+  multi-tenant serving engine (repro.serving.engine): one pre-coalesced
+  fixed-shape ray tile in, pixels out, same per-tile body as the image
+  program so cross-request coalescing is invisible in the output.
 * Early ray termination (Cicero, arXiv 2404.11852): with ``ert_eps > 0``
   rays whose transmittance after the coarse pass fell below the threshold
   keep the coarse color and skip the fine-pass MLP — a real
@@ -49,6 +53,7 @@ from repro.core import plcore
 # survives param refreshes and ckpt reloads.
 _IMAGE_JITS: dict = {}
 _RAY_JITS: dict = {}
+_TILE_JITS: dict = {}
 
 
 def _donating_jit(fn, donate_names=()):
@@ -100,6 +105,36 @@ def _ray_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
 
         fn = _donating_jit(run, ("rays_o", "rays_d"))
         _RAY_JITS[key] = fn
+    return fn
+
+
+def _tile_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
+             fuse_two_pass: bool = False):
+    """Tile-stream program: ONE pre-coalesced fixed-shape ray tile ->
+    pixel colors. This is the serving-engine entry point — the engine
+    coalesces rays from many concurrent requests into a tile, dispatches
+    it here, and scatters the pixels back to per-request framebuffers.
+
+    The tile body is the SAME render_rays call the image program's
+    lax.map runs per tile, so a coalesced tile reproduces the per-request
+    ``render_image`` pixels bit-for-bit (every per-ray op — encoding,
+    MLP matmul rows, VRU integration — depends only on its own ray).
+    Returns rgb ONLY, so nothing but the pixels leaves the program.
+    Compiled once per (cfg, flags) and re-specialized per tile shape;
+    tile buffers are donated off-CPU (the engine builds fresh ones per
+    dispatch)."""
+    key = (cfg, use_kernel, float(ert_eps), fuse_two_pass)
+    fn = _TILE_JITS.get(key)
+    if fn is None:
+        def run(params, quant, packed, o_tile, d_tile):
+            out = plcore.render_rays(
+                cfg, params, o_tile, d_tile, quant=quant, packed=packed,
+                use_kernel=use_kernel, fuse_two_pass=fuse_two_pass,
+                ert_eps=ert_eps, white_bkgd=True)
+            return out["rgb"]
+
+        fn = _donating_jit(run, ("o_tile", "d_tile"))
+        _TILE_JITS[key] = fn
     return fn
 
 
@@ -169,3 +204,15 @@ class PackedPlcore:
             fuse_two_pass=self.fuse_two_pass,
             rays_per_batch=rays_per_batch,
             ert_eps=self.ert_eps if ert_eps is None else ert_eps)
+
+    def render_tile(self, o_tile, d_tile,
+                    ert_eps: Optional[float] = None) -> jnp.ndarray:
+        """Render ONE pre-coalesced ray tile -> rgb (n, 3). The serving
+        engine's dispatch path: fixed tile shapes hit the same compiled
+        program every call (no per-request retrace), and the tile body is
+        identical to ``render_image``'s per-tile body, so scattered
+        pixels match the per-request render bit-for-bit. Off-CPU the
+        tile buffers are DONATED — pass fresh arrays per dispatch."""
+        eps = self.ert_eps if ert_eps is None else float(ert_eps)
+        fn = _tile_fn(self.cfg, self.use_kernel, eps, self.fuse_two_pass)
+        return fn(self.params, self.quant, self.packed, o_tile, d_tile)

@@ -23,10 +23,29 @@ Two services:
   ``--tiled`` falls back to the seed per-tile host loop (the benchmark
   baseline — see benchmarks/plcore_fusion.py for the measured gap).
 
+* ``--mode engine``: the multi-tenant serving engine (repro.serving) —
+  one process, many scenes, many concurrent requests. Spins up ``--scenes``
+  N model instances behind a ``SceneCache`` (LRU over ``--cache-mb`` MB of
+  resident packed weights), drives a fixed-seed Poisson trace of
+  ``--requests`` requests (``--rate`` req/s, resolutions drawn from
+  ``--hw-mix``, priorities from ``--priority-mix``) through the
+  continuous-batching ``RenderEngine`` (``--tile-rays`` per coalesced
+  tile), and reports throughput, p50/p95/p99 latency, dispatch savings vs
+  the per-request baseline, and cache hit/miss/eviction counters.
+  ``--loop open`` replays arrival times faithfully (queueing delay in the
+  tail); ``--loop closed`` holds ``--concurrency`` in flight
+  (deterministic — the CI mode). ``--check`` exits nonzero unless every
+  request completed, the cache hit rate is > 0 and coalescing issued no
+  more dispatches than the per-request baseline. ``--kernel``,
+  ``--fuse-two-pass``, ``--rmcm``, ``--ert`` and ``--vmem-budget-mb``
+  apply to the engine's render path exactly as in ``--mode nerf``.
+
 * ``--mode lm``: batched LM inference on any assigned arch (smoke config on
   CPU): prefill a prompt batch, decode N tokens with the KV/state cache.
 
     PYTHONPATH=src python -m repro.launch.serve --mode nerf --hw 64
+    PYTHONPATH=src python -m repro.launch.serve --mode engine --scenes 3 \
+        --requests 12 --loop closed --check
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch qwen2-1.5b
 """
 from __future__ import annotations
@@ -155,6 +174,65 @@ def serve_nerf(args) -> dict:
     return stats
 
 
+def serve_engine(args) -> dict:
+    """Multi-tenant serving: N scenes behind an LRU weight cache, a
+    Poisson request trace through the coalescing RenderEngine."""
+    from dataclasses import replace
+
+    from repro.serving import RenderEngine, SceneCache
+    from repro.serving import loadgen
+
+    cfg = NERF_FULL if args.full else nerf_tiny()
+    if args.ert > 0.0:
+        cfg = replace(cfg, ert_eps=args.ert)
+    if args.vmem_budget_mb is not None:
+        cfg = replace(cfg, kernel_vmem_budget_mb=args.vmem_budget_mb)
+    if args.fuse_two_pass and not args.kernel:
+        raise SystemExit("--fuse-two-pass requires --kernel")
+
+    scene_ids = [f"scene{i}" for i in range(args.scenes)]
+
+    def load_scene(scene_id: str) -> PackedPlcore:
+        # one synthetic model per scene id: a distinct param draw stands
+        # in for a distinct trained checkpoint
+        idx = scene_ids.index(scene_id)
+        params = init_params(plcore_decls(cfg),
+                             jax.random.PRNGKey(args.seed + idx), "float32")
+        quant = None
+        if args.rmcm:
+            quant = {"coarse": rmcm.quantize_tree(params["coarse"]),
+                     "fine": rmcm.quantize_tree(params["fine"])}
+        return PackedPlcore(cfg, params, quant=quant,
+                            use_kernel=args.kernel,
+                            fuse_two_pass=args.fuse_two_pass)
+
+    cache = SceneCache(load_scene, capacity_mb=args.cache_mb)
+    engine = RenderEngine(cache, tile_rays=args.tile_rays)
+    trace = loadgen.poisson_trace(
+        args.requests, scene_ids, rate_rps=args.rate,
+        hw_choices=tuple(int(h) for h in args.hw_mix.split(",")),
+        priorities=tuple(int(p) for p in args.priority_mix.split(",")),
+        seed=args.seed)
+    stats = loadgen.run_trace(engine, trace, mode=args.loop,
+                              concurrency=args.concurrency)
+    stats = {"scenes": args.scenes, "tile_rays": args.tile_rays,
+             "kernel": bool(args.kernel),
+             "fuse_two_pass": bool(args.fuse_two_pass),
+             "ert_eps": cfg.ert_eps, **stats}
+    print(json.dumps(stats, indent=2))
+    if args.check:
+        if stats["requests_completed"] != args.requests:
+            raise SystemExit(f"engine check: {stats['requests_completed']}"
+                             f"/{args.requests} requests completed")
+        if stats["cache"]["hit_rate"] <= 0.0:
+            raise SystemExit("engine check: scene-cache hit rate is 0")
+        if stats["dispatch_savings"] < 0:
+            raise SystemExit("engine check: coalescing issued MORE "
+                             "dispatches than the per-request baseline")
+        print("engine check OK")
+    return stats
+
+
 def serve_lm(args) -> dict:
     cfg = smoke_config(args.arch) if not args.full else get_config(args.arch)
     model = build_model(cfg)
@@ -200,7 +278,8 @@ def serve_lm(args) -> dict:
 
 def build_parser():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["nerf", "lm"], default="nerf")
+    ap.add_argument("--mode", choices=["nerf", "engine", "lm"],
+                    default="nerf")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     # nerf
@@ -225,6 +304,27 @@ def build_parser():
                     help="fused-kernel VMEM budget for the activation slab")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--out", default=None)
+    # engine (multi-tenant serving)
+    ap.add_argument("--scenes", type=int, default=3,
+                    help="number of resident-candidate scene models")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="open-loop Poisson arrival rate (req/s)")
+    ap.add_argument("--tile-rays", type=int, default=512,
+                    help="rays per coalesced dispatch tile")
+    ap.add_argument("--cache-mb", type=float, default=256.0,
+                    help="scene-cache capacity (MB of packed weights)")
+    ap.add_argument("--loop", choices=["open", "closed"], default="open")
+    ap.add_argument("--concurrency", type=int, default=4,
+                    help="closed-loop in-flight request count")
+    ap.add_argument("--hw-mix", default="16,32",
+                    help="comma list of request resolutions")
+    ap.add_argument("--priority-mix", default="0",
+                    help="comma list of request priorities (higher wins)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless all requests completed, "
+                         "cache hit rate > 0, and coalescing saved "
+                         "dispatches (the CI smoke gate)")
     # lm
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--batch", type=int, default=4)
@@ -235,4 +335,5 @@ def build_parser():
 
 if __name__ == "__main__":
     args = build_parser().parse_args()
-    (serve_nerf if args.mode == "nerf" else serve_lm)(args)
+    {"nerf": serve_nerf, "engine": serve_engine,
+     "lm": serve_lm}[args.mode](args)

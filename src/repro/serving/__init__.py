@@ -1,0 +1,21 @@
+"""Multi-tenant PLCore serving — the layer between the fused kernel and
+"heavy traffic from millions of users" (ROADMAP north star).
+
+The paper scales rendering by tiling PLCores behind a ray dispatcher
+(ICARUS §5, Fig. 1); this package is the host-side restatement of that
+dispatcher for many *concurrent requests over many scenes*:
+
+* ``engine``       — request queue + continuous-batching loop that
+                     coalesces rays across requests into fixed-shape
+                     tiles (Cicero-style cross-frame scheduling).
+* ``scene_cache``  — LRU of resident ``PackedPlcore`` weight sets so one
+                     process serves many scenes (FlexNeRFer-style
+                     multi-model residency).
+* ``loadgen``      — synthetic open/closed-loop client (Poisson
+                     arrivals, mixed resolutions) reporting throughput
+                     and tail latency.
+"""
+from repro.serving.engine import RenderEngine, RenderRequest, RenderResult
+from repro.serving.scene_cache import SceneCache
+
+__all__ = ["RenderEngine", "RenderRequest", "RenderResult", "SceneCache"]

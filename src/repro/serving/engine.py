@@ -1,0 +1,237 @@
+"""Multi-tenant render engine: request queue + continuous ray batching.
+
+ICARUS §5 scales by putting a ray dispatcher in front of many PLCores;
+Cicero (2404.11852) shows that once the per-sample kernel is fused, the
+remaining throughput lever is *scheduling* — keeping every tile full by
+mixing rays from whatever work is queued. ``RenderEngine`` is that
+dispatcher for concurrent multi-scene traffic:
+
+* ``submit`` enqueues a ``RenderRequest`` (scene id + camera + resolution
+  + priority) and allocates its framebuffer (NaN-filled: every pixel must
+  arrive via a tile scatter, so gaps or cross-request leaks surface as
+  NaN instead of silently reading as black).
+* ``step`` runs ONE continuous-batching iteration: pick the scene of the
+  best (priority, FIFO) pending request — sticky to the current scene at
+  equal priority so queued tiles group by scene and the weight cache
+  stays hot — fill one fixed-shape tile of ``tile_rays`` rays from that
+  scene's pending requests in queue order, pad only a tail tile, dispatch
+  through ``PackedPlcore.render_tile`` (the cached tile-stream program —
+  the same per-tile body as ``render_image``, so coalescing is invisible
+  in the output), and scatter the pixels back to each contributing
+  request's framebuffer. Requests complete OUT OF ORDER as their last ray
+  lands.
+* ``stats`` carries the coalescing accounting (`kernels.ops` counter
+  style): ``dispatches`` actually issued vs ``dispatch_baseline`` — the
+  sum of per-request ``ceil(n_rays / tile_rays)`` a request-at-a-time
+  server would have paid. Coalescing wins whenever request sizes don't
+  divide the tile.
+
+The engine is deliberately synchronous and single-device: it is the
+scheduling layer that later scaling PRs (sharding, async device streams,
+multi-host) plug into, not a thread pool.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import rays as R
+from repro.serving.scene_cache import SceneCache
+
+
+@dataclass(frozen=True)
+class RenderRequest:
+    """One render-an-image request. The camera is a spherical orbit pose
+    (the repo's scene convention); ``priority`` is higher-wins, ties
+    FIFO."""
+    scene_id: str
+    hw: int = 64
+    theta: float = 45.0
+    phi: float = -25.0
+    radius: float = 4.0
+    priority: int = 0
+
+
+@dataclass
+class RenderResult:
+    request_id: int
+    scene_id: str
+    image: np.ndarray            # (hw, hw, 3) float32
+    n_rays: int
+    submit_s: float              # engine-clock timestamps
+    complete_s: float
+    dispatch_baseline: int       # tiles a request-at-a-time server pays
+
+    @property
+    def latency_s(self) -> float:
+        return self.complete_s - self.submit_s
+
+
+class _Active:
+    """Queue entry: request + flattened rays + framebuffer + cursors."""
+    __slots__ = ("req", "rid", "seq", "rays_o", "rays_d", "fb",
+                 "next_ray", "n_done", "n_rays", "submit_s")
+
+    def __init__(self, req: RenderRequest, rid: int, seq: int, now: float):
+        self.req, self.rid, self.seq, self.submit_s = req, rid, seq, now
+        c2w = R.pose_spherical(req.theta, req.phi, req.radius)
+        ro, rd = R.camera_rays(c2w, req.hw, req.hw, 0.9 * req.hw)
+        self.rays_o = np.asarray(ro, np.float32).reshape(-1, 3)
+        self.rays_d = np.asarray(rd, np.float32).reshape(-1, 3)
+        self.n_rays = self.rays_o.shape[0]
+        # NaN framebuffer: a pixel the scatter never wrote — or a padded
+        # tail ray leaking into a neighbor — cannot hide as black
+        self.fb = np.full((self.n_rays, 3), np.nan, np.float32)
+        self.next_ray = 0            # rays handed to tiles so far
+        self.n_done = 0              # rays scattered back so far
+
+
+class RenderEngine:
+    """Continuous-batching serving loop over a ``SceneCache``.
+
+    ``tile_rays`` is the fixed dispatch shape — every tile that reaches
+    the device has exactly this many rays (the compiled tile program is
+    reused forever), and only a tail tile carries padding."""
+
+    def __init__(self, cache: SceneCache, *, tile_rays: int = 512,
+                 max_sticky_tiles: int = 64, clock=time.perf_counter):
+        self.cache = cache
+        self.tile_rays = int(tile_rays)
+        # stickiness bound: after this many consecutive tiles for one
+        # scene, the best-ranked request wins even at equal priority —
+        # residency amortizes, but an early request for another scene
+        # can't be starved forever by a stream of same-priority arrivals
+        self.max_sticky_tiles = int(max_sticky_tiles)
+        self._clock = clock
+        self._queue: List[_Active] = []
+        self._seq = 0
+        self._current_scene: Optional[str] = None
+        self._sticky_run = 0         # consecutive tiles for current scene
+        self.completed: Dict[int, RenderResult] = {}
+        self.completion_order: List[int] = []
+        self.stats = {
+            "dispatches": 0,            # tiles actually issued
+            "dispatch_baseline": 0,     # sum ceil(n_rays/tile) per request
+            "rays_rendered": 0,         # real rays scattered back
+            "padded_rays": 0,           # tail-tile filler rays
+            "scene_switches": 0,        # resident-weight changes
+            "requests_completed": 0,
+        }
+
+    # ------------------------------------------------------------ queue ----
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def pending_rays(self) -> int:
+        return sum(a.n_rays - a.next_ray for a in self._queue)
+
+    def submit(self, req: RenderRequest) -> int:
+        """Enqueue a request; returns its request id."""
+        if req.hw < 1:
+            raise ValueError(f"request resolution must be >= 1, got "
+                             f"hw={req.hw}")
+        rid = self._seq
+        self._seq += 1
+        self._queue.append(_Active(req, rid, rid, self._clock()))
+        self.stats["dispatch_baseline"] += -(-self._queue[-1].n_rays
+                                             // self.tile_rays)
+        return rid
+
+    def _rank(self, a: _Active):
+        return (-a.req.priority, a.seq)
+
+    def _pick_scene(self) -> str:
+        """Scene of the best-ranked pending request — but sticky to the
+        current scene while it still has queued rays at the same top
+        priority, so consecutive tiles group by scene (weight residency
+        amortizes); a strictly higher-priority request preempts, and
+        ``max_sticky_tiles`` bounds how long an equal-priority request
+        for another scene can be bypassed."""
+        best = min(self._queue, key=self._rank)
+        if (self._current_scene is not None
+                and self._sticky_run < self.max_sticky_tiles):
+            mine = [a.req.priority for a in self._queue
+                    if a.req.scene_id == self._current_scene]
+            if mine and best.req.priority <= max(mine):
+                return self._current_scene
+        return best.req.scene_id
+
+    # ------------------------------------------------------------- loop ----
+    def step(self) -> bool:
+        """One continuous-batching iteration: coalesce one tile, dispatch,
+        scatter. Returns False when the queue is idle."""
+        if not self._queue:
+            return False
+        scene = self._pick_scene()
+        if scene != self._current_scene:
+            self.stats["scene_switches"] += 1
+            self._current_scene = scene
+            self._sticky_run = 0
+        self._sticky_run += 1
+        pp = self.cache.get(scene)
+
+        # fill ONE tile from this scene's pending requests in queue order
+        spans, chunks_o, chunks_d, n = [], [], [], 0
+        for a in sorted((a for a in self._queue
+                         if a.req.scene_id == scene), key=self._rank):
+            take = min(a.n_rays - a.next_ray, self.tile_rays - n)
+            if take <= 0:
+                continue
+            spans.append((a, a.next_ray, take))
+            chunks_o.append(a.rays_o[a.next_ray:a.next_ray + take])
+            chunks_d.append(a.rays_d[a.next_ray:a.next_ray + take])
+            a.next_ray += take
+            n += take
+            if n == self.tile_rays:
+                break
+        pad = self.tile_rays - n
+        if pad:                       # tail tile: repeat the last real ray
+            chunks_o.append(np.repeat(chunks_o[-1][-1:], pad, axis=0))
+            chunks_d.append(np.repeat(chunks_d[-1][-1:], pad, axis=0))
+            self.stats["padded_rays"] += pad
+
+        rgb = np.asarray(pp.render_tile(jnp.asarray(np.concatenate(chunks_o)),
+                                        jnp.asarray(np.concatenate(chunks_d))))
+        self.stats["dispatches"] += 1
+        self.stats["rays_rendered"] += n
+
+        off = 0
+        for a, start, take in spans:
+            a.fb[start:start + take] = rgb[off:off + take]
+            a.n_done += take
+            off += take
+            if a.n_done == a.n_rays:
+                self._complete(a)
+        return True
+
+    def _complete(self, a: _Active) -> None:
+        self._queue.remove(a)
+        hw = a.req.hw
+        res = RenderResult(
+            request_id=a.rid, scene_id=a.req.scene_id,
+            image=a.fb.reshape(hw, hw, 3), n_rays=a.n_rays,
+            submit_s=a.submit_s, complete_s=self._clock(),
+            dispatch_baseline=-(-a.n_rays // self.tile_rays))
+        self.completed[a.rid] = res
+        self.completion_order.append(a.rid)
+        self.stats["requests_completed"] += 1
+
+    def take(self, request_id: int) -> RenderResult:
+        """Pop a completed result, releasing its framebuffer. Long-running
+        servers must consume results through this (``completed`` retains
+        every image otherwise — fine for bounded traces/tests only)."""
+        return self.completed.pop(request_id)
+
+    def drain(self, max_steps: Optional[int] = None) -> int:
+        """Run until idle (or ``max_steps``); returns steps taken."""
+        steps = 0
+        while self._queue and (max_steps is None or steps < max_steps):
+            self.step()
+            steps += 1
+        return steps

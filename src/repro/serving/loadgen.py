@@ -1,0 +1,132 @@
+"""Synthetic serving client: deterministic Poisson traces + two drive
+modes against a ``RenderEngine``.
+
+* ``poisson_trace`` — N requests with exponential inter-arrival gaps
+  (rate in req/s), scene ids drawn uniformly, mixed resolutions and
+  priorities; everything from one ``np.random.RandomState(seed)`` so a
+  trace is reproducible byte-for-byte (the CI smoke relies on this).
+* ``run_open_loop`` — arrival-time-faithful: requests are injected when
+  their wall-clock arrival passes whether or not the engine kept up, so
+  queueing delay shows up in the tail latencies (the serving-relevant
+  number).
+* ``run_closed_loop`` — fixed concurrency, next request submitted as one
+  completes; arrival times are ignored. Deterministic step count, which
+  makes it the bench/CI mode.
+
+Both report throughput (req/s, rays/s), p50/p95/p99 request latency, and
+the engine + scene-cache counters (dispatch savings vs the per-request
+baseline, cache hit rate).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.serving.engine import RenderEngine, RenderRequest
+
+
+@dataclass(frozen=True)
+class TraceItem:
+    arrival_s: float
+    request: RenderRequest
+
+
+def poisson_trace(n_requests: int, scene_ids: Sequence[str],
+                  rate_rps: float = 50.0,
+                  hw_choices: Sequence[int] = (16, 32),
+                  priorities: Sequence[int] = (0,),
+                  seed: int = 0) -> List[TraceItem]:
+    """Open-loop arrival trace: Poisson process at ``rate_rps`` over
+    uniformly-drawn scenes, resolutions and priorities. Deterministic in
+    ``seed``."""
+    rng = np.random.RandomState(seed)
+    items, t = [], 0.0
+    for _ in range(n_requests):
+        t += float(rng.exponential(1.0 / rate_rps))
+        items.append(TraceItem(t, RenderRequest(
+            scene_id=scene_ids[int(rng.randint(len(scene_ids)))],
+            hw=int(hw_choices[int(rng.randint(len(hw_choices)))]),
+            theta=float(rng.uniform(0.0, 360.0)),
+            phi=float(rng.uniform(-35.0, -15.0)),
+            priority=int(priorities[int(rng.randint(len(priorities)))]))))
+    return items
+
+
+def _percentiles_ms(latencies_s: Sequence[float]) -> dict:
+    if not latencies_s:
+        return {"p50": None, "p95": None, "p99": None}
+    ms = np.asarray(latencies_s) * 1e3
+    return {p: round(float(np.percentile(ms, q)), 3)
+            for p, q in (("p50", 50), ("p95", 95), ("p99", 99))}
+
+
+def _report(engine: RenderEngine, latencies_s: List[float],
+            wall_s: float, mode: str) -> dict:
+    st = dict(engine.stats)
+    n = st["requests_completed"]
+    return {
+        "mode": mode,
+        "requests_completed": n,
+        "wall_s": round(wall_s, 4),
+        "req_per_s": round(n / wall_s, 2) if wall_s > 0 else None,
+        "rays_per_s": round(st["rays_rendered"] / wall_s, 1)
+        if wall_s > 0 else None,
+        "latency_ms": _percentiles_ms(latencies_s),
+        "engine": st,
+        "dispatch_savings": st["dispatch_baseline"] - st["dispatches"],
+        "cache": engine.cache.stats(),
+    }
+
+
+def run_open_loop(engine: RenderEngine, trace: List[TraceItem]) -> dict:
+    """Wall-clock open loop: each request is submitted once its arrival
+    time has passed; latency = completion - *arrival* (queueing delay
+    included). Idles sleep until the next arrival."""
+    clock = time.perf_counter
+    t0 = clock()
+    arrivals = {}           # rid -> absolute arrival time
+    i = 0
+    while i < len(trace) or engine.pending:
+        now = clock() - t0
+        while i < len(trace) and trace[i].arrival_s <= now:
+            rid = engine.submit(trace[i].request)
+            arrivals[rid] = t0 + trace[i].arrival_s
+            i += 1
+        if not engine.step() and i < len(trace):
+            time.sleep(max(0.0, min(trace[i].arrival_s - (clock() - t0),
+                                    0.05)))
+    wall = clock() - t0
+    lats = [engine.completed[rid].complete_s - t_arr
+            for rid, t_arr in arrivals.items() if rid in engine.completed]
+    return _report(engine, lats, wall, "open")
+
+
+def run_closed_loop(engine: RenderEngine, trace: List[TraceItem],
+                    concurrency: int = 4) -> dict:
+    """Closed loop at fixed concurrency: arrival times ignored, the next
+    trace request enters as one in flight completes; latency =
+    completion - submit. Deterministic given a deterministic clockless
+    engine path (the CI/bench mode)."""
+    t0 = time.perf_counter()
+    i, done0 = 0, len(engine.completion_order)
+    while i < len(trace) or engine.pending:
+        while i < len(trace) and engine.pending < concurrency:
+            engine.submit(trace[i].request)
+            i += 1
+        engine.step()
+    wall = time.perf_counter() - t0
+    lats = [engine.completed[rid].latency_s
+            for rid in engine.completion_order[done0:]]
+    return _report(engine, lats, wall, "closed")
+
+
+def run_trace(engine: RenderEngine, trace: List[TraceItem], *,
+              mode: str = "open", concurrency: int = 4) -> dict:
+    if mode == "open":
+        return run_open_loop(engine, trace)
+    if mode == "closed":
+        return run_closed_loop(engine, trace, concurrency)
+    raise ValueError(f"unknown loadgen mode: {mode!r}")

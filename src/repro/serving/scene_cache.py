@@ -1,0 +1,92 @@
+"""Multi-scene weight cache — FlexNeRFer-style (2505.06504) model
+residency for the serving engine.
+
+One process serves many scenes, but packing a scene's weights into the
+kernel layout (``stack_plcore_weights`` + RMCM quantization) is load-time
+work the render path must never repeat (``kernels.ops.pack_count`` is the
+proof obligation). ``SceneCache`` keeps a capacity-bounded LRU of
+``PackedPlcore`` instances: first touch of a scene pays the pack, every
+queued tile for a resident scene reuses it, and the engine's
+scene-grouped batching keeps touches clustered so residency is long.
+
+Capacity is in MB of actual array bytes (params + quant + packed kernel
+layout), not entry count — the quantity that competes for device memory.
+Eviction never removes the just-inserted entry, so a cache smaller than
+one scene still serves (it just thrashes, and the counters show it).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable, Tuple
+
+import jax
+
+from repro.core.pipeline import PackedPlcore
+
+
+def plcore_nbytes(pp: PackedPlcore) -> int:
+    """Resident bytes of one loaded scene: every array hanging off the
+    PackedPlcore (raw params + RMCM quant tree + packed kernel layout)."""
+    leaves = jax.tree_util.tree_leaves((pp.params, pp.quant, pp.packed))
+    return int(sum(a.size * a.dtype.itemsize for a in leaves))
+
+
+class SceneCache:
+    """LRU cache of loaded scenes: ``scene_id -> PackedPlcore``.
+
+    ``loader(scene_id)`` builds a PackedPlcore on miss (the once-per-
+    residency pack); ``capacity_mb`` bounds total resident bytes. Hits,
+    misses and evictions are counted for the serving stats."""
+
+    def __init__(self, loader: Callable[[str], PackedPlcore],
+                 capacity_mb: float = 256.0):
+        self._loader = loader
+        self.capacity_bytes = int(capacity_mb * (1 << 20))
+        self._entries: "OrderedDict[str, Tuple[PackedPlcore, int]]" = \
+            OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __contains__(self, scene_id: str) -> bool:
+        return scene_id in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def resident_scenes(self) -> list:
+        """LRU -> MRU order."""
+        return list(self._entries)
+
+    @property
+    def resident_bytes(self) -> int:
+        return sum(nb for _, nb in self._entries.values())
+
+    def get(self, scene_id: str) -> PackedPlcore:
+        """Fetch a scene, loading (and possibly evicting) on miss. The
+        returned instance is resident until LRU eviction pushes it out."""
+        ent = self._entries.get(scene_id)
+        if ent is not None:
+            self.hits += 1
+            self._entries.move_to_end(scene_id)
+            return ent[0]
+        self.misses += 1
+        pp = self._loader(scene_id)
+        self._entries[scene_id] = (pp, plcore_nbytes(pp))
+        while (len(self._entries) > 1
+               and self.resident_bytes > self.capacity_bytes):
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return pp
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "hits": self.hits, "misses": self.misses,
+            "evictions": self.evictions,
+            "hit_rate": round(self.hits / total, 4) if total else 0.0,
+            "resident_scenes": len(self._entries),
+            "resident_mb": round(self.resident_bytes / (1 << 20), 3),
+            "capacity_mb": round(self.capacity_bytes / (1 << 20), 3),
+        }
