@@ -9,11 +9,15 @@ Three reports:
      NOT indicative — the bytes number is the architectural claim);
   3. serving-pipeline comparison (``bench_pipeline``): seed per-tile host
      loop vs. the single-dispatch lax.map pipeline (+ERT) vs. the kernel
-     paths — two-dispatch coarse/fine and the one-kernel two-pass chain
+     paths — two-dispatch coarse/fine, the one-kernel two-pass chain
      (``two_pass_fused``, ``two_pass_fused_ert`` with per-ray
-     compaction), full-image wall time at tiny scale. benchmarks/run.py
-     persists this one as BENCH_plcore.json (latest + append-only
-     ``history``) so the perf trajectory is trackable across PRs.
+     compaction) and the mesh-sharded-weight variant
+     (``two_pass_fused_sharded``: trunk stacks layer-partitioned over
+     the local device mesh, per-layer all-gather in the program; the
+     ``sharding`` dict records per-device resident MB vs replicated) —
+     full-image wall time at tiny scale. benchmarks/run.py persists this
+     one as BENCH_plcore.json (latest + append-only ``history``) so the
+     perf trajectory is trackable across PRs.
 """
 from __future__ import annotations
 
@@ -105,9 +109,18 @@ def bench_pipeline(hw: int = None, rays_per_batch: int = 1024,
     n_rays = hw * hw
     n_samples = n_rays * (cfg.n_coarse + cfg.n_coarse + cfg.n_fine)
 
+    from repro.kernels import ops as kops
+    from repro.runtime import sharding as rsh
+    from repro.serving.scene_cache import plcore_nbytes
+
     # kernel engines: weights packed once at load, outside the timed loop
     eng_2d = PackedPlcore(cfg, params, use_kernel=True)
     eng_tp = PackedPlcore(cfg, params, use_kernel=True, fuse_two_pass=True)
+    # mesh-sharded residency over the local devices (a 1-device CI box
+    # degrades to replicated: the variant then times the gather no-ops)
+    mesh = rsh.plcore_mesh()
+    eng_sh = PackedPlcore(cfg, params, use_kernel=True, fuse_two_pass=True,
+                          shard_mesh=mesh)
 
     variants = {
         "seed_loop": lambda: render_image_tiled(
@@ -123,9 +136,22 @@ def bench_pipeline(hw: int = None, rays_per_batch: int = 1024,
             ro, rd, rays_per_batch=rays_per_batch),
         "two_pass_fused_ert": lambda: eng_tp.render_image(
             ro, rd, rays_per_batch=rays_per_batch, ert_eps=ert_eps),
+        "two_pass_fused_sharded": lambda: eng_sh.render_image(
+            ro, rd, rays_per_batch=rays_per_batch),
     }
+    n_shards = rsh.plcore_shard_count(mesh, cfg.trunk_layers)
     out = {"hw": hw, "rays": n_rays, "samples": n_samples,
            "rays_per_batch": rays_per_batch, "ert_eps": ert_eps,
+           "sharding": {
+               "devices": int(mesh.size), "weight_shards": n_shards,
+               "resident_mb_per_device": round(
+                   plcore_nbytes(eng_sh) / (1 << 20), 4),
+               "resident_mb_replicated": round(
+                   plcore_nbytes(eng_tp) / (1 << 20), 4),
+               "resident_model_mb_per_device": round(
+                   2 * kops.plcore_resident_weight_bytes(cfg, n_shards)
+                   / (1 << 20), 4),
+           },
            "variants": {}}
     # Interleaved rounds + MIN wall time per variant: this container's
     # cores are shared, so contention bursts poison means and medians;
@@ -157,6 +183,8 @@ def bench_pipeline(hw: int = None, rays_per_batch: int = 1024,
         v["seed_loop"]["wall_s"] / v["two_pass_fused"]["wall_s"], 2)
     out["speedup_two_pass_ert_vs_seed"] = round(
         v["seed_loop"]["wall_s"] / v["two_pass_fused_ert"]["wall_s"], 2)
+    out["speedup_two_pass_sharded_vs_seed"] = round(
+        v["seed_loop"]["wall_s"] / v["two_pass_fused_sharded"]["wall_s"], 2)
     emit("plcore_fusion/speedup_single_vs_seed", 0.0,
          f"x{out['speedup_single_vs_seed']}")
     emit("plcore_fusion/speedup_two_pass_ert_vs_seed", 0.0,

@@ -8,6 +8,12 @@ the SAME trace request-by-request through ``PackedPlcore.render_image``
 as the sequential baseline, so the engine's scheduling win (not just the
 kernel's) is what the number isolates.
 
+A second pass replays the SAME trace through a cache whose residents are
+mesh-sharded (``PackedPlcore(..., shard_mesh=...)`` — trunk stacks
+layer-partitioned over the local devices): the ``sharding`` key records
+its req/s next to the per-device resident MB per scene, replicated vs
+sharded — the capacity-scaling quantity the SceneCache budgets against.
+
 ``benchmarks/run.py serving`` lands the result in ``BENCH_plcore.json``'s
 append-only history next to the kernel variants, so the serving-layer
 trajectory is tracked across PRs like the kernel one. BENCH_SERVING_*
@@ -26,8 +32,28 @@ from repro.configs.nerf_icarus import tiny
 from repro.core.pipeline import PackedPlcore
 from repro.core.plcore import plcore_decls
 from repro.models.params import init_params
+from repro.runtime import sharding as rsh
 from repro.serving import RenderEngine, SceneCache
 from repro.serving import loadgen
+from repro.serving.scene_cache import plcore_nbytes
+
+
+def _warm(cache, scene_ids, hw_mix, tile_rays):
+    """Touch EVERY scene (load + pack) and compile the tile +
+    per-resolution image programs, then zero the cache counters so the
+    measured run's hit rate describes the measured trace, not warm-up."""
+    from repro.data import rays as R
+    warm_engine = RenderEngine(cache, tile_rays=tile_rays)
+    for sid in scene_ids:
+        warm_engine.submit(loadgen.poisson_trace(
+            1, [sid], rate_rps=1e3, hw_choices=hw_mix, seed=1)[0].request)
+    warm_engine.drain()
+    for hw in hw_mix:
+        ro_w, rd_w = R.camera_rays(R.pose_spherical(0.0, -25.0, 4.0),
+                                   hw, hw, 0.9 * hw)
+        cache.get(scene_ids[0]).render_image(
+            ro_w, rd_w, rays_per_batch=tile_rays).block_until_ready()
+    cache.hits = cache.misses = cache.evictions = 0
 
 
 def run() -> dict:
@@ -45,36 +71,45 @@ def run() -> dict:
                        capacity_mb=256.0)
     trace = loadgen.poisson_trace(n_requests, scene_ids, rate_rps=100.0,
                                   hw_choices=hw_mix, seed=0)
-
-    # warm deterministically: touch EVERY scene (load + pack) and compile
-    # the tile + per-resolution image programs, then zero the cache
-    # counters so the measured run's hit rate describes the measured
-    # trace, not the warm-up
     from repro.data import rays as R
-    warm_engine = RenderEngine(cache, tile_rays=tile_rays)
-    for sid in scene_ids:
-        warm_engine.submit(loadgen.poisson_trace(
-            1, [sid], rate_rps=1e3, hw_choices=hw_mix, seed=1)[0].request)
-    warm_engine.drain()
-    for hw in hw_mix:
-        ro_w, rd_w = R.camera_rays(R.pose_spherical(0.0, -25.0, 4.0),
-                                   hw, hw, 0.9 * hw)
-        cache.get(scene_ids[0]).render_image(
-            ro_w, rd_w, rays_per_batch=tile_rays).block_until_ready()
-    cache.hits = cache.misses = cache.evictions = 0
+    _warm(cache, scene_ids, hw_mix, tile_rays)
 
-    engine = RenderEngine(cache, tile_rays=tile_rays)
-    rep = loadgen.run_trace(engine, trace, mode="closed", concurrency=4)
+    # sharded-resident pass setup: same trace, cache residents layer-
+    # partitioned over the local device mesh (1-device CI box: replicated
+    # fallback, the run then prices the gather no-ops + per-device
+    # accounting)
+    from repro.kernels import ops as kops
+    mesh = rsh.plcore_mesh()
+    n_shards = rsh.plcore_shard_count(mesh, cfg.trunk_layers)
+    cache_sh = SceneCache(
+        lambda sid: PackedPlcore(cfg, param_sets[sid], shard_mesh=mesh),
+        capacity_mb=256.0)
+    _warm(cache_sh, scene_ids, hw_mix, tile_rays)
 
-    # sequential request-at-a-time baseline over the same trace
-    t0 = time.perf_counter()
-    for item in trace:
-        req = item.request
-        c2w = R.pose_spherical(req.theta, req.phi, req.radius)
-        ro, rd = R.camera_rays(c2w, req.hw, req.hw, 0.9 * req.hw)
-        cache.get(req.scene_id).render_image(
-            ro, rd, rays_per_batch=tile_rays).block_until_ready()
-    seq_wall = time.perf_counter() - t0
+    # interleaved rounds + best (min-wall) per pass — the fusion suite's
+    # rationale: on a shared CI box, back-to-back passes record
+    # contention bursts as signal; interleaving + min compares the
+    # engine variants and the sequential baseline on equal footing
+    reps, reps_sh, seq_walls = [], [], []
+    for _ in range(2):
+        engine = RenderEngine(cache, tile_rays=tile_rays)
+        reps.append(loadgen.run_trace(engine, trace, mode="closed",
+                                      concurrency=4))
+        # sequential request-at-a-time baseline over the same trace
+        t0 = time.perf_counter()
+        for item in trace:
+            req = item.request
+            c2w = R.pose_spherical(req.theta, req.phi, req.radius)
+            ro, rd = R.camera_rays(c2w, req.hw, req.hw, 0.9 * req.hw)
+            cache.get(req.scene_id).render_image(
+                ro, rd, rays_per_batch=tile_rays).block_until_ready()
+        seq_walls.append(time.perf_counter() - t0)
+        engine_sh = RenderEngine(cache_sh, tile_rays=tile_rays)
+        reps_sh.append(loadgen.run_trace(engine_sh, trace, mode="closed",
+                                         concurrency=4))
+    rep = min(reps, key=lambda r: r["wall_s"])
+    rep_sh = min(reps_sh, key=lambda r: r["wall_s"])
+    seq_wall = min(seq_walls)
 
     out = {
         "scenes": n_scenes, "requests": n_requests, "tile_rays": tile_rays,
@@ -88,8 +123,31 @@ def run() -> dict:
         "engine_wall_s": rep["wall_s"],
         "speedup_engine_vs_sequential": round(seq_wall / rep["wall_s"], 2)
         if rep["wall_s"] else None,
+        "sharding": {
+            "devices": int(mesh.size),
+            "weight_shards": n_shards,
+            "req_per_s": rep_sh["req_per_s"],
+            # measured as deployed: sharded residents hold raw heads +
+            # the layer-sharded trunk stacks, the replicated baseline
+            # raw params only — a layout difference (128-row stack
+            # padding) on top of the sharding one
+            "resident_mb_per_scene": round(
+                plcore_nbytes(cache_sh.get(scene_ids[0])) / (1 << 20), 4),
+            "resident_mb_per_scene_replicated": round(
+                plcore_nbytes(cache.get(scene_ids[0])) / (1 << 20), 4),
+            # analytic, layout-matched pair: the SAME packed layout at
+            # n_shards vs 1 — isolates what sharding alone buys
+            "resident_model_mb_per_scene": round(
+                2 * kops.plcore_resident_weight_bytes(cfg, n_shards)
+                / (1 << 20), 4),
+            "resident_model_mb_replicated": round(
+                2 * kops.plcore_resident_weight_bytes(cfg, 1)
+                / (1 << 20), 4),
+        },
     }
     emit("serving/req_per_s", 0.0, f"req_per_s={out['req_per_s']}")
+    emit("serving/sharded_req_per_s", 0.0,
+         f"req_per_s={out['sharding']['req_per_s']}")
     emit("serving/latency_p50_ms", out["latency_ms"]["p50"],
          f"p99={out['latency_ms']['p99']}")
     emit("serving/dispatch_savings", 0.0,

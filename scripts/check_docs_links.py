@@ -1,0 +1,50 @@
+#!/usr/bin/env python
+"""Docs link check — fail on broken RELATIVE links in README.md and
+docs/*.md (the CI gate the docs satellite of PR 4 added).
+
+Checks every markdown link target that is not an external URL or a pure
+in-page anchor; targets resolve relative to the file that contains them,
+and a ``#fragment`` suffix is stripped before the existence check.
+
+    python scripts/check_docs_links.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def main() -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    files = [p for p in [root / "README.md"] if p.exists()]
+    files += sorted((root / "docs").glob("*.md"))
+    if not files:
+        print("docs link check: no README.md or docs/*.md found",
+              file=sys.stderr)
+        return 1
+    bad, n_links = [], 0
+    for f in files:
+        for m in LINK.finditer(f.read_text()):
+            target = m.group(1)
+            if re.match(r"^[a-zA-Z][a-zA-Z0-9+.-]*:", target):
+                continue                       # http(s):, mailto:, ...
+            path = target.split("#", 1)[0]
+            if not path:
+                continue                       # pure in-page anchor
+            n_links += 1
+            if not (f.parent / path).resolve().exists():
+                bad.append(f"{f.relative_to(root)}: broken link -> {target}")
+    for line in bad:
+        print(line, file=sys.stderr)
+    if bad:
+        return 1
+    print(f"docs link check OK ({len(files)} files, {n_links} "
+          f"relative links)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,4 +25,16 @@ echo "== serving engine smoke (3 scenes, deterministic trace) =="
 python -m repro.launch.serve --mode engine --scenes 3 --requests 9 \
     --hw-mix 12,16 --tile-rays 128 --loop closed --seed 0 --check
 
+echo "== sharded-weights engine smoke (8 fake CPU devices) =="
+# same gate with mesh-sharded weight residency: 8 fake host devices,
+# trunk stacks 4-way layer-sharded (tiny cfg has 4 trunk layers), every
+# render re-gathering layers inside the cached programs
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m repro.launch.serve --mode engine --scenes 3 --requests 9 \
+    --hw-mix 12,16 --tile-rays 128 --loop closed --seed 0 \
+    --shard-weights --shard-devices 4 --check
+
+echo "== docs link check =="
+python scripts/check_docs_links.py
+
 echo "CI OK"

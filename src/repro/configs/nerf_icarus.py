@@ -34,8 +34,13 @@ class NerfConfig:
     rmcm_enabled: bool = True
     # render batching — PLCore analogue: rays per fused-kernel tile
     rays_per_tile: int = 128    # paper batch-computing: 128 samples weight-stationary
-    # fused-kernel VMEM budget for the (rt*N, P) activation slab; rt is
-    # chosen so weights + slab stay resident (TPU v4/v5 VMEM ~= 16 MB/core)
+    # fused-kernel VMEM budget (TPU v4/v5 ~= 16 MB/core). The one-kernel
+    # two-pass path pins BOTH networks' gathered weight stacks as the
+    # working set every grid step (2x the single-pass footprint — see
+    # kernels.ops.pick_ray_tile_two_pass) plus resample/merge scratch;
+    # the ray tile rt is sized so the remainder fits the (rt*N, P)
+    # activation slab. Mesh-sharding the weights shrinks the HBM-resident
+    # footprint, not this working set.
     kernel_vmem_budget_mb: float = 16.0
     # early ray termination (Cicero-style): after the coarse pass, rays whose
     # remaining transmittance T < ert_eps skip the fine-pass MLP and keep the

@@ -28,6 +28,17 @@ call. This module is the weight-stationary restatement:
   multi-tenant serving engine (repro.serving.engine): one pre-coalesced
   fixed-shape ray tile in, pixels out, same per-tile body as the image
   program so cross-request coalescing is invisible in the output.
+* ``shard_mesh`` — mesh-sharded weight residency: the packed trunk
+  stacks become the ONLY trunk copy, partitioned layer-wise over the
+  ("pod","data") axes (runtime.sharding.shard_plcore_packed), so
+  per-device resident weight bytes shrink ~1/n_shards and bigger models
+  (or more cached scenes) fit a fixed per-device budget. Every render
+  program re-materializes the layers inside the traced computation with
+  per-layer all-gathers (overlappable with the previous layer's matmul);
+  the kernel path feeds the gathered stacks to the Pallas entry points
+  unchanged, the XLA path rebuilds the raw per-layer params from them
+  (kernels.ops.unstack_trunk_params — lossless, so sharded rendering is
+  bit-identical to replicated in image, ray, and tile modes alike).
 * Early ray termination (Cicero, arXiv 2404.11852): with ``ert_eps > 0``
   rays whose transmittance after the coarse pass fell below the threshold
   keep the coarse color and skip the fine-pass MLP — a real
@@ -68,12 +79,43 @@ def _donating_jit(fn, donate_names=()):
     return jax.jit(fn, donate_argnums=tuple(pos[n] for n in donate_names))
 
 
+def _materialize(cfg: NerfConfig, params, quant, packed, shard_mesh,
+                 use_kernel: bool):
+    """First step of every traced render program when weights are
+    mesh-sharded: per-layer all-gather the trunk stacks (the collectives
+    are independent per layer, so XLA overlaps layer i's gather with the
+    layer i-1 matmul) and hand compute a replicated view. The kernel
+    path consumes the gathered packed layout directly; the XLA path
+    rebuilds the raw per-layer trunk params (and RMCM quant dicts) from
+    it — ``unstack_trunk_params`` is lossless, so both paths stay
+    bit-identical to the replicated program. No-op without a mesh."""
+    if shard_mesh is None:
+        return params, quant, packed
+    from repro.kernels import ops as kops
+    from repro.runtime import sharding as rsh
+    gathered = {net: rsh.gather_plcore_packed(p, shard_mesh)
+                for net, p in packed.items()}
+    if use_kernel:
+        return params, quant, gathered
+    new_p: dict = {}
+    new_q = None if quant is None else {}
+    for net, g in gathered.items():
+        trunk_p, trunk_q = kops.unstack_trunk_params(cfg, g)
+        new_p[net] = {**params[net], "trunk": trunk_p}
+        if new_q is not None:
+            new_q[net] = {**quant[net], "trunk": trunk_q}
+    return new_p, new_q, None
+
+
 def _image_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
-              fuse_two_pass: bool = False):
-    key = (cfg, use_kernel, float(ert_eps), fuse_two_pass)
+              fuse_two_pass: bool = False, shard_mesh=None):
+    key = (cfg, use_kernel, float(ert_eps), fuse_two_pass, shard_mesh)
     fn = _IMAGE_JITS.get(key)
     if fn is None:
         def run(params, quant, packed, o_tiles, d_tiles):
+            params, quant, packed = _materialize(
+                cfg, params, quant, packed, shard_mesh, use_kernel)
+
             def tile(od):
                 o, d = od
                 out = plcore.render_rays(
@@ -89,15 +131,17 @@ def _image_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
 
 
 def _ray_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
-            fuse_two_pass: bool = False):
+            fuse_two_pass: bool = False, shard_mesh=None):
     # NOTE donation contract: on non-CPU backends the rays_o/rays_d
     # buffers are CONSUMED by the program (standard jax donation) — the
     # serving loop hands each ray batch over and never reuses it. Callers
     # that cache a ray grid across calls must pass a fresh copy.
-    key = (cfg, use_kernel, float(ert_eps), fuse_two_pass)
+    key = (cfg, use_kernel, float(ert_eps), fuse_two_pass, shard_mesh)
     fn = _RAY_JITS.get(key)
     if fn is None:
         def run(params, quant, packed, rays_o, rays_d, k):
+            params, quant, packed = _materialize(
+                cfg, params, quant, packed, shard_mesh, use_kernel)
             return plcore.render_rays(
                 cfg, params, rays_o, rays_d, k, quant=quant, packed=packed,
                 use_kernel=use_kernel, fuse_two_pass=fuse_two_pass,
@@ -109,7 +153,7 @@ def _ray_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
 
 
 def _tile_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
-             fuse_two_pass: bool = False):
+             fuse_two_pass: bool = False, shard_mesh=None):
     """Tile-stream program: ONE pre-coalesced fixed-shape ray tile ->
     pixel colors. This is the serving-engine entry point — the engine
     coalesces rays from many concurrent requests into a tile, dispatches
@@ -123,10 +167,12 @@ def _tile_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
     Compiled once per (cfg, flags) and re-specialized per tile shape;
     tile buffers are donated off-CPU (the engine builds fresh ones per
     dispatch)."""
-    key = (cfg, use_kernel, float(ert_eps), fuse_two_pass)
+    key = (cfg, use_kernel, float(ert_eps), fuse_two_pass, shard_mesh)
     fn = _TILE_JITS.get(key)
     if fn is None:
         def run(params, quant, packed, o_tile, d_tile):
+            params, quant, packed = _materialize(
+                cfg, params, quant, packed, shard_mesh, use_kernel)
             out = plcore.render_rays(
                 cfg, params, o_tile, d_tile, quant=quant, packed=packed,
                 use_kernel=use_kernel, fuse_two_pass=fuse_two_pass,
@@ -144,13 +190,14 @@ def render_image_single(cfg: NerfConfig, params, rays_o, rays_d, *,
                         use_kernel: bool = False,
                         fuse_two_pass: bool = False,
                         rays_per_batch: int = 4096,
-                        ert_eps: Optional[float] = None) -> jnp.ndarray:
+                        ert_eps: Optional[float] = None,
+                        shard_mesh=None) -> jnp.ndarray:
     """One-dispatch full-image render. rays: (H, W, 3) -> rgb (H, W, 3)."""
     H, W, _ = rays_o.shape
     eps = cfg.ert_eps if ert_eps is None else float(ert_eps)
     o_tiles, d_tiles, n = plcore.flatten_pad_rays(rays_o, rays_d,
                                                   rays_per_batch)
-    fn = _image_fn(cfg, use_kernel, eps, fuse_two_pass)
+    fn = _image_fn(cfg, use_kernel, eps, fuse_two_pass, shard_mesh)
     rgb = fn(params, quant, packed, o_tiles, d_tiles)
     return rgb.reshape(-1, 3)[:n].reshape(H, W, 3)
 
@@ -162,29 +209,67 @@ class PackedPlcore:
     This is the serving-side object: build it at model-load time, then
     stream ``render_image`` / ``render_rays`` calls through it. All jitted
     programs are shared across instances with the same config/flags.
+
+    ``shard_mesh``: a jax Mesh (runtime.sharding.plcore_mesh builds the
+    canonical 1-D one) to shard the trunk weight stacks layer-wise over
+    its ("pod","data") axes. The packed stacks then become the ONLY
+    resident trunk copy — the raw replicated trunk params are dropped, so
+    per-device resident bytes shrink ~1/n_shards — and every render
+    program re-gathers layers just-in-time (bit-identical output). Works
+    with and without ``use_kernel``; the seed per-tile loop
+    (plcore.render_image_tiled) does NOT understand sharded weights.
     """
 
     def __init__(self, cfg: NerfConfig, params: dict, *,
                  quant: Optional[dict] = None, use_kernel: bool = False,
                  fuse_two_pass: bool = False,
-                 ert_eps: Optional[float] = None):
+                 ert_eps: Optional[float] = None, shard_mesh=None):
         if fuse_two_pass and not use_kernel:
             raise ValueError("fuse_two_pass routes through the Pallas "
                              "kernel — pass use_kernel=True")
         self.cfg = cfg
-        self.params = params
-        self.quant = quant
         self.use_kernel = use_kernel
         self.fuse_two_pass = fuse_two_pass
         self.ert_eps = cfg.ert_eps if ert_eps is None else float(ert_eps)
+        self.shard_mesh = shard_mesh
         self.packed = None
-        if use_kernel:
+        if use_kernel or shard_mesh is not None:
             from repro.kernels import ops as kops
             q = quant or {}
             self.packed = {
                 net: kops.stack_plcore_weights(cfg, params[net], q.get(net))
                 for net in ("coarse", "fine")}
-            # materialize now: packing cost is paid at load, not first call
+        if shard_mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.runtime import sharding as rsh
+            if not use_kernel:
+                # the XLA path consumes ONLY the trunk stacks from the
+                # packed layout (_materialize rebuilds trunk params from
+                # them; heads render from the retained raw params) —
+                # keeping the packed heads resident would roughly double
+                # the per-scene footprint for nothing
+                self.packed = {
+                    net: {k: v for k, v in p.items()
+                          if k.startswith("trunk")}
+                    for net, p in self.packed.items()}
+            self.packed = {net: rsh.shard_plcore_packed(p, shard_mesh)
+                           for net, p in self.packed.items()}
+            # the sharded stacks are now the only trunk residency: drop
+            # the replicated raw copies; heads stay replicated on the
+            # mesh (small, and every cell reads them every pass)
+            repl = NamedSharding(shard_mesh, PartitionSpec())
+            params = {net: jax.device_put(
+                {k: v for k, v in params[net].items() if k != "trunk"},
+                repl) for net in ("coarse", "fine")}
+            if quant is not None:
+                quant = {net: jax.device_put(
+                    {k: v for k, v in quant[net].items() if k != "trunk"},
+                    repl) for net in ("coarse", "fine")}
+        self.params = params
+        self.quant = quant
+        if self.packed is not None:
+            # materialize now: packing (and any resharding) cost is paid
+            # at load, not first call
             jax.block_until_ready(self.packed)
 
     def render_rays(self, rays_o, rays_d, key=None, *,
@@ -193,7 +278,8 @@ class PackedPlcore:
         DONATED to the program (the streaming-serving contract) — pass a
         fresh batch (or an explicit copy) per call there."""
         eps = self.ert_eps if ert_eps is None else float(ert_eps)
-        fn = _ray_fn(self.cfg, self.use_kernel, eps, self.fuse_two_pass)
+        fn = _ray_fn(self.cfg, self.use_kernel, eps, self.fuse_two_pass,
+                     self.shard_mesh)
         return fn(self.params, self.quant, self.packed, rays_o, rays_d, key)
 
     def render_image(self, rays_o, rays_d, *, rays_per_batch: int = 4096,
@@ -203,7 +289,8 @@ class PackedPlcore:
             packed=self.packed, use_kernel=self.use_kernel,
             fuse_two_pass=self.fuse_two_pass,
             rays_per_batch=rays_per_batch,
-            ert_eps=self.ert_eps if ert_eps is None else ert_eps)
+            ert_eps=self.ert_eps if ert_eps is None else ert_eps,
+            shard_mesh=self.shard_mesh)
 
     def render_tile(self, o_tile, d_tile,
                     ert_eps: Optional[float] = None) -> jnp.ndarray:
@@ -214,5 +301,6 @@ class PackedPlcore:
         pixels match the per-request render bit-for-bit. Off-CPU the
         tile buffers are DONATED — pass fresh arrays per dispatch."""
         eps = self.ert_eps if ert_eps is None else float(ert_eps)
-        fn = _tile_fn(self.cfg, self.use_kernel, eps, self.fuse_two_pass)
+        fn = _tile_fn(self.cfg, self.use_kernel, eps, self.fuse_two_pass,
+                      self.shard_mesh)
         return fn(self.params, self.quant, self.packed, o_tile, d_tile)

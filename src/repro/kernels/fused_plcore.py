@@ -40,12 +40,17 @@ HBM traffic per ray (f32 words), N = n_coarse + n_fine samples:
                             pinned (1, Nc) row       + acc, acc_c, depth (3)
 
 VMEM budget (``ops.pick_ray_tile_two_pass``): BOTH networks' weight
-stacks stay resident every grid step (2x the single-pass footprint,
-~7.3 MB f32 at full scale) and the per-ray scratch adds the fine slab
-(N x P), the resample one-hot (n_fine x (n_coarse-1)) and the rank-merge
-scatter one-hots (N x N); rt is sized so weights + scratch fit
-``NerfConfig.kernel_vmem_budget_mb`` (default 16 MB — one TPU v4/v5
-core's VMEM).
+stacks occupy VMEM every grid step as the GATHERED working set (2x the
+single-pass footprint, ~7.3 MB f32 at full scale) and the per-ray
+scratch adds the fine slab (N x P), the resample one-hot
+(n_fine x (n_coarse-1)) and the rank-merge scatter one-hots (N x N); rt
+is sized so weights + scratch fit ``NerfConfig.kernel_vmem_budget_mb``
+(default 16 MB — one TPU v4/v5 core's VMEM). Both entry points take
+GATHERED (replicated) weight layouts: with mesh-sharded residency
+(runtime.sharding) the pipeline all-gathers each trunk layer
+just-in-time inside the same jitted program before the kernel launches —
+sharding shrinks the per-device HBM-resident footprint
+(``ops.plcore_resident_weight_bytes``), never this working set.
 
 Off-TPU, ``two_pass_plcore_call`` runs the same tile body through a
 ``lax.map`` grid emulator instead of the Pallas interpreter (identical

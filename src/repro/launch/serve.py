@@ -19,7 +19,16 @@ Two services:
   transmittance after the coarse pass is < EPS skip the fine-pass MLP;
   under ``--fuse-two-pass`` the kernel compacts alive rays so mixed ray
   tiles also skip work);
-  ``--vmem-budget-mb`` sizes the fused kernel's activation slab;
+  ``--shard-weights`` shards the packed trunk weight stacks layer-wise
+  over the local device mesh (``--shard-devices`` caps how many devices
+  the mesh uses; the mesh size must divide the trunk layer count for
+  the split to engage — otherwise residency silently stays replicated)
+  — per-device resident weight bytes shrink ~1/n_shards while
+  render programs all-gather each layer just-in-time, bit-identical to
+  the replicated path;
+  ``--vmem-budget-mb`` sizes the fused kernel's VMEM budget — under
+  ``--fuse-two-pass`` BOTH networks' gathered weight stacks stay pinned
+  as the working set and the activation slab gets the remainder;
   ``--tiled`` falls back to the seed per-tile host loop (the benchmark
   baseline — see benchmarks/plcore_fusion.py for the measured gap).
 
@@ -35,10 +44,15 @@ Two services:
   ``--loop open`` replays arrival times faithfully (queueing delay in the
   tail); ``--loop closed`` holds ``--concurrency`` in flight
   (deterministic — the CI mode). ``--check`` exits nonzero unless every
-  request completed, the cache hit rate is > 0 and coalescing issued no
-  more dispatches than the per-request baseline. ``--kernel``,
-  ``--fuse-two-pass``, ``--rmcm``, ``--ert`` and ``--vmem-budget-mb``
-  apply to the engine's render path exactly as in ``--mode nerf``.
+  request completed, the cache hit rate is > 0, coalescing issued no
+  more dispatches than the per-request baseline and — under
+  ``--shard-weights`` — the layer split actually engaged
+  (weight_shards > 1, catching silent replicated fallback). ``--kernel``,
+  ``--fuse-two-pass``, ``--rmcm``, ``--ert``, ``--vmem-budget-mb`` and
+  ``--shard-weights``/``--shard-devices`` apply to the engine's render
+  path exactly as in ``--mode nerf`` — with sharding the cache stores
+  every resident scene's trunk stacks partitioned over the mesh, so
+  ``--cache-mb`` (a per-device budget) holds ~n_shards x more scenes.
 
 * ``--mode lm``: batched LM inference on any assigned arch (smoke config on
   CPU): prefill a prompt batch, decode N tokens with the KV/state cache.
@@ -98,6 +112,15 @@ def nerf_energy_uj_per_sample(cfg, fused: bool) -> float:
     return (flops * PJ_PER_FLOP + bytes_per_sample * PJ_PER_BYTE) * 1e-6
 
 
+def _shard_mesh_from_args(args):
+    """``--shard-weights`` -> the canonical 1-D PLCore mesh over the
+    first ``--shard-devices`` local devices (all by default)."""
+    if not args.shard_weights:
+        return None
+    from repro.runtime import sharding as rsh
+    return rsh.plcore_mesh(args.shard_devices)
+
+
 def serve_nerf(args) -> dict:
     from dataclasses import replace
 
@@ -126,6 +149,10 @@ def serve_nerf(args) -> dict:
         raise SystemExit("--fuse-two-pass runs the whole chain in one "
                          "Pallas kernel; it requires --kernel and the "
                          "single-dispatch pipeline (drop --tiled)")
+    shard_mesh = _shard_mesh_from_args(args)
+    if shard_mesh is not None and args.tiled:
+        raise SystemExit("--shard-weights needs the single-dispatch "
+                         "pipeline's gather-aware programs; drop --tiled")
 
     # load-time work: RMCM quantization + kernel weight packing run ONCE
     # here; every render below reuses the packed layout
@@ -133,7 +160,8 @@ def serve_nerf(args) -> dict:
     if not args.tiled:
         engine = PackedPlcore(cfg, params, quant=quant,
                               use_kernel=args.kernel,
-                              fuse_two_pass=args.fuse_two_pass)
+                              fuse_two_pass=args.fuse_two_pass,
+                              shard_mesh=shard_mesh)
     packs_at_load = kops.pack_count()
 
     scene = R.SCENES[args.scene]()
@@ -170,6 +198,14 @@ def serve_nerf(args) -> dict:
         "ert_eps": cfg.ert_eps,
         "weight_packs_since_load": kops.pack_count() - packs_at_load,
     }
+    if shard_mesh is not None:
+        from repro.runtime import sharding as rsh
+        from repro.serving.scene_cache import plcore_nbytes
+        stats["shard_devices"] = int(shard_mesh.size)
+        stats["weight_shards"] = rsh.plcore_shard_count(shard_mesh,
+                                                        cfg.trunk_layers)
+        stats["resident_mb_per_device"] = round(
+            plcore_nbytes(engine) / (1 << 20), 3)
     print(json.dumps(stats, indent=2))
     return stats
 
@@ -189,6 +225,7 @@ def serve_engine(args) -> dict:
         cfg = replace(cfg, kernel_vmem_budget_mb=args.vmem_budget_mb)
     if args.fuse_two_pass and not args.kernel:
         raise SystemExit("--fuse-two-pass requires --kernel")
+    shard_mesh = _shard_mesh_from_args(args)
 
     scene_ids = [f"scene{i}" for i in range(args.scenes)]
 
@@ -204,7 +241,8 @@ def serve_engine(args) -> dict:
                      "fine": rmcm.quantize_tree(params["fine"])}
         return PackedPlcore(cfg, params, quant=quant,
                             use_kernel=args.kernel,
-                            fuse_two_pass=args.fuse_two_pass)
+                            fuse_two_pass=args.fuse_two_pass,
+                            shard_mesh=shard_mesh)
 
     cache = SceneCache(load_scene, capacity_mb=args.cache_mb)
     engine = RenderEngine(cache, tile_rays=args.tile_rays)
@@ -219,6 +257,11 @@ def serve_engine(args) -> dict:
              "kernel": bool(args.kernel),
              "fuse_two_pass": bool(args.fuse_two_pass),
              "ert_eps": cfg.ert_eps, **stats}
+    if shard_mesh is not None:
+        from repro.runtime import sharding as rsh
+        stats["shard_devices"] = int(shard_mesh.size)
+        stats["weight_shards"] = rsh.plcore_shard_count(shard_mesh,
+                                                        cfg.trunk_layers)
     print(json.dumps(stats, indent=2))
     if args.check:
         if stats["requests_completed"] != args.requests:
@@ -229,6 +272,15 @@ def serve_engine(args) -> dict:
         if stats["dispatch_savings"] < 0:
             raise SystemExit("engine check: coalescing issued MORE "
                              "dispatches than the per-request baseline")
+        if shard_mesh is not None and stats["weight_shards"] <= 1:
+            # --shard-weights degrading to replicated must not pass the
+            # CI gate green: it means the mesh size does not divide the
+            # trunk layer count (or the fake-device flag stopped working)
+            raise SystemExit(
+                f"engine check: --shard-weights fell back to replicated "
+                f"(weight_shards={stats['weight_shards']} on "
+                f"{stats['shard_devices']} devices; the mesh size must "
+                f"divide trunk_layers={cfg.trunk_layers})")
         print("engine check OK")
     return stats
 
@@ -300,8 +352,22 @@ def build_parser():
     ap.add_argument("--tiled", action="store_true",
                     help="seed per-tile host loop instead of the "
                          "single-dispatch pipeline")
+    ap.add_argument("--shard-weights", action="store_true",
+                    help="shard the packed trunk weight stacks layer-wise "
+                         "over the local device mesh; render programs "
+                         "all-gather each layer just-in-time "
+                         "(bit-identical, ~1/n_shards resident bytes per "
+                         "device)")
+    ap.add_argument("--shard-devices", type=int, default=None,
+                    help="cap how many local devices the weight-sharding "
+                         "mesh uses (default: all; the mesh size must "
+                         "divide the trunk layer count for the split to "
+                         "engage)")
     ap.add_argument("--vmem-budget-mb", type=float, default=None,
-                    help="fused-kernel VMEM budget for the activation slab")
+                    help="fused-kernel VMEM budget: the gathered weight "
+                         "working set (both networks under "
+                         "--fuse-two-pass) stays pinned and the "
+                         "activation slab gets the remainder")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--out", default=None)
     # engine (multi-tenant serving)

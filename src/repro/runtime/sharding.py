@@ -15,6 +15,7 @@ from dataclasses import dataclass, field, replace
 from typing import Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -169,6 +170,112 @@ def attn_needs_batch_reshard(n_heads: int) -> bool:
     if mesh is None or mesh.shape.get("model", 1) <= 1:
         return False
     return n_heads % mesh.shape["model"] != 0
+
+
+# ------------------------------------------------ PLCore weight sharding --
+# ICARUS keeps whole-model weights resident per PLCore; replicated over a
+# mesh that residency is the binding constraint (weight bytes, not FLOPs —
+# FlexNeRFer/Cicero's memory-traffic argument). The packed trunk stacks
+# (kernels.ops.stack_plcore_weights lays every trunk tensor out as
+# (L, ...) with the layer axis leading) shard LAYER-WISE over the
+# ("pod","data") axes; render programs re-materialize each layer with a
+# per-layer all-gather that XLA's latency-hiding scheduler can overlap
+# with the previous layer's matmul. Sharding is placement only — values
+# never change — so the sharded path renders bit-identical pixels
+# (tests/test_sharded_weights.py holds image, kernel and engine modes to
+# exact equality against the replicated path).
+
+PLCORE_SHARD_AXES: Tuple[str, ...] = ("pod", "data")
+
+
+def plcore_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D ("data",) mesh over the first ``n_devices`` local devices
+    (default: all). The trunk stacks shard over whichever of
+    ("pod","data") the mesh carries; an axis whose size does not divide
+    the layer count degrades to replicated (``plcore_stack_spec``), so
+    this is always safe to build — a 1-device mesh just replicates."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else max(1, min(int(n_devices),
+                                                       len(devs)))
+    return Mesh(np.array(devs[:n]), ("data",))
+
+
+def plcore_stack_spec(mesh: Mesh, n_layers: int) -> P:
+    """PartitionSpec for one (L, ...) layer stack: axis 0 split over the
+    ("pod","data") axes present in the mesh, dropping (replicating) any
+    axis whose accumulated size does not divide L — the same graceful
+    degradation as ``Rules.resolve``."""
+    axes = []
+    for a in PLCORE_SHARD_AXES:
+        if a in mesh.shape:
+            size = int(np.prod([mesh.shape[x] for x in axes + [a]]))
+            if size > 0 and n_layers % size == 0:
+                axes.append(a)
+    if not axes:
+        return P()
+    return P(tuple(axes) if len(axes) > 1 else axes[0])
+
+
+def plcore_shard_count(mesh: Mesh, n_layers: int) -> int:
+    """How many ways ``plcore_stack_spec`` actually splits the layer axis
+    (1 = replicated fallback)."""
+    spec = plcore_stack_spec(mesh, n_layers)
+    if len(spec) == 0 or spec[0] is None:
+        return 1
+    axes = spec[0] if isinstance(spec[0], tuple) else (spec[0],)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _is_stacked(key: str) -> bool:
+    """Keys of the packed layout whose leading axis is the trunk layer
+    stack (trunk_w / trunk_b and the RMCM trunk_mag/sgn/scl)."""
+    return key.startswith("trunk")
+
+
+def shard_plcore_packed(packed: dict, mesh: Mesh) -> dict:
+    """device_put one network's ``stack_plcore_weights`` layout: trunk
+    stacks layer-sharded over the mesh, heads replicated (they are small
+    and every mesh cell reads them every pass)."""
+    out = {}
+    for k, a in packed.items():
+        spec = plcore_stack_spec(mesh, a.shape[0]) if _is_stacked(k) else P()
+        out[k] = jax.device_put(a, NamedSharding(mesh, spec))
+    return out
+
+
+# Per-layer gather counter — kernels.ops.pack_count trace-time semantics:
+# ticks once per layer per stacked array when a render program TRACES;
+# cached program re-runs tick nothing. Tests pin the just-in-time gather
+# structure (L independent collectives, not one monolithic all-gather)
+# through this counter.
+_PLCORE_GATHER_COUNT = 0
+
+
+def plcore_gather_count() -> int:
+    return _PLCORE_GATHER_COUNT
+
+
+def gather_plcore_stack(stack, mesh: Mesh):
+    """(L, ...) layer-sharded stack -> replicated, one all-gather PER
+    LAYER: each layer is sliced out and constrained to replicated
+    individually, so XLA sees L independent collectives it can schedule
+    just-in-time — layer i's gather overlaps the layer i-1 matmul —
+    instead of one monolithic all-gather blocking the whole trunk."""
+    global _PLCORE_GATHER_COUNT
+    repl = NamedSharding(mesh, P())
+    layers = []
+    for i in range(stack.shape[0]):
+        _PLCORE_GATHER_COUNT += 1
+        layers.append(jax.lax.with_sharding_constraint(stack[i], repl))
+    return jnp.stack(layers)
+
+
+def gather_plcore_packed(packed: dict, mesh: Mesh) -> dict:
+    """Materialize one network's sharded packed layout for compute:
+    trunk stacks gathered layer-by-layer, replicated heads passed
+    through. Values are bit-identical to the replicated layout."""
+    return {k: gather_plcore_stack(a, mesh) if _is_stacked(k) else a
+            for k, a in packed.items()}
 
 
 def pspecs(decls, mesh: Mesh, rules: Rules):

@@ -26,9 +26,15 @@ dispatcher for concurrent multi-scene traffic:
   server would have paid. Coalescing wins whenever request sizes don't
   divide the tile.
 
-The engine is deliberately synchronous and single-device: it is the
-scheduling layer that later scaling PRs (sharding, async device streams,
-multi-host) plug into, not a thread pool.
+The engine is deliberately synchronous: it is the scheduling layer that
+later scaling PRs (async device streams, multi-host) plug into, not a
+thread pool. Mesh-sharded weight residency already plugs in underneath
+it with NO engine change: a ``SceneCache`` loader that builds
+``PackedPlcore(..., shard_mesh=...)`` residents stores each scene's
+trunk stacks partitioned over the mesh (the cache's per-device byte
+accounting then fits ~n_shards x more scenes), and ``render_tile``
+re-gathers layers inside its cached program — scene-grouped tiles route
+through unchanged and the scattered pixels stay bit-identical.
 """
 from __future__ import annotations
 

@@ -11,8 +11,14 @@ scene-grouped batching keeps touches clustered so residency is long.
 
 Capacity is in MB of actual array bytes (params + quant + packed kernel
 layout), not entry count — the quantity that competes for device memory.
-Eviction never removes the just-inserted entry, so a cache smaller than
-one scene still serves (it just thrashes, and the counters show it).
+The accounting is PER DEVICE: a replicated array costs its full size on
+every device (so it counts once, as before), but a mesh-sharded resident
+(``PackedPlcore(..., shard_mesh=...)`` — trunk stacks layer-partitioned
+over the ("pod","data") axes) costs each device only its shard, so the
+same ``capacity_mb`` holds ~n_shards x more scenes and cache capacity
+scales with the mesh. Eviction never removes the just-inserted entry, so
+a cache smaller than one scene still serves (it just thrashes, and the
+counters show it).
 """
 from __future__ import annotations
 
@@ -24,19 +30,38 @@ import jax
 from repro.core.pipeline import PackedPlcore
 
 
+def device_nbytes(a) -> int:
+    """Per-device resident bytes of one array: the largest total any
+    single device holds. Replicated (or single-device) arrays cost their
+    full size; an array sharded k ways costs size/k."""
+    try:
+        per_dev: dict = {}
+        for s in a.addressable_shards:
+            per_dev[s.device] = (per_dev.get(s.device, 0)
+                                 + s.data.size * a.dtype.itemsize)
+        if per_dev:
+            return int(max(per_dev.values()))
+    except (AttributeError, TypeError):
+        pass
+    return int(a.size * a.dtype.itemsize)
+
+
 def plcore_nbytes(pp: PackedPlcore) -> int:
-    """Resident bytes of one loaded scene: every array hanging off the
-    PackedPlcore (raw params + RMCM quant tree + packed kernel layout)."""
+    """Per-device resident bytes of one loaded scene: every array hanging
+    off the PackedPlcore (raw params + RMCM quant tree + packed kernel
+    layout), sharded arrays counted at their per-device shard size."""
     leaves = jax.tree_util.tree_leaves((pp.params, pp.quant, pp.packed))
-    return int(sum(a.size * a.dtype.itemsize for a in leaves))
+    return int(sum(device_nbytes(a) for a in leaves))
 
 
 class SceneCache:
     """LRU cache of loaded scenes: ``scene_id -> PackedPlcore``.
 
     ``loader(scene_id)`` builds a PackedPlcore on miss (the once-per-
-    residency pack); ``capacity_mb`` bounds total resident bytes. Hits,
-    misses and evictions are counted for the serving stats."""
+    residency pack); ``capacity_mb`` bounds total PER-DEVICE resident
+    bytes, so a loader that builds mesh-sharded residents fits
+    proportionally more scenes in the same budget. Hits, misses and
+    evictions are counted for the serving stats."""
 
     def __init__(self, loader: Callable[[str], PackedPlcore],
                  capacity_mb: float = 256.0):
