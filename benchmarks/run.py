@@ -8,8 +8,10 @@ persists its serving-pipeline comparison (seed tile loop vs single
 dispatch vs kernel paths vs the mesh-sharded-weight variant: wall_s /
 rays_per_s / samples_per_s, plus the ``sharding`` residency dict), and
 the ``serving`` suite its multi-tenant engine numbers (req/s, p50/p95/
-p99 latency, dispatch savings, cache hit rate, and a sharded-resident
-pass — under the ``serving`` key), into ``BENCH_plcore.json`` at the
+p99 latency split into queueing vs service, dispatch savings, cache hit
+rate, the depth>=2 pipelined-executor pass, and a sharded-resident pass
+with routed-vs-unrouted gather accounting — under the ``serving`` key),
+into ``BENCH_plcore.json`` at the
 repo root: the top-level fields are
 the LATEST run, and the append-only ``history`` list (git SHA, date,
 plus whichever suites ran) records every canonical-scale run so the

@@ -2,17 +2,28 @@
 
 Drives a fixed-seed closed-loop trace (N scenes, mixed resolutions)
 through ``repro.serving.RenderEngine`` and reports request throughput,
-p50/p95/p99 latency, the coalescing dispatch savings vs a
-request-at-a-time server, and the scene-cache hit rate — then renders
-the SAME trace request-by-request through ``PackedPlcore.render_image``
-as the sequential baseline, so the engine's scheduling win (not just the
-kernel's) is what the number isolates.
+p50/p95/p99 latency — split into queueing delay vs service time — the
+coalescing dispatch savings vs a request-at-a-time server, and the
+scene-cache hit rate — then renders the SAME trace request-by-request
+through ``PackedPlcore.render_image`` as the sequential baseline, so
+the engine's scheduling win (not just the kernel's) is what the number
+isolates.
 
-A second pass replays the SAME trace through a cache whose residents are
-mesh-sharded (``PackedPlcore(..., shard_mesh=...)`` — trunk stacks
-layer-partitioned over the local devices): the ``sharding`` key records
-its req/s next to the per-device resident MB per scene, replicated vs
-sharded — the capacity-scaling quantity the SceneCache budgets against.
+Two more interleaved passes cover the scheduler/executor split:
+
+* ``pipeline``: the SAME trace at ``pipeline_depth >= 2`` (env
+  ``BENCH_SERVING_DEPTH``, default 2) next to the depth=1 numbers — the
+  double-buffered executor's req/s + latency vs the synchronous loop,
+  persisted per PR so the async-dispatch trajectory is tracked like the
+  kernel one.
+* ``sharding``: the trace through a cache whose residents are
+  mesh-sharded (``PackedPlcore(..., shard_mesh=...)`` — trunk stacks
+  layer-partitioned over the local devices), unrouted AND
+  ``route_by_shard``: per-device resident MB per scene (the
+  capacity-scaling quantity the SceneCache budgets against) plus the
+  engine's owner-map gather accounting (``plcore_gather_count`` /
+  ``_bytes``) — the cross-device weight-traffic quantity routing
+  shrinks.
 
 ``benchmarks/run.py serving`` lands the result in ``BENCH_plcore.json``'s
 append-only history next to the kernel variants, so the serving-layer
@@ -60,6 +71,7 @@ def run() -> dict:
     n_scenes = int(os.environ.get("BENCH_SERVING_SCENES", "3"))
     n_requests = int(os.environ.get("BENCH_SERVING_REQUESTS", "12"))
     tile_rays = int(os.environ.get("BENCH_SERVING_TILE", "512"))
+    depth = max(2, int(os.environ.get("BENCH_SERVING_DEPTH", "2")))
     hw_mix = (16, 32)
     cfg = tiny()
     scene_ids = [f"scene{i}" for i in range(n_scenes)]
@@ -90,7 +102,7 @@ def run() -> dict:
     # rationale: on a shared CI box, back-to-back passes record
     # contention bursts as signal; interleaving + min compares the
     # engine variants and the sequential baseline on equal footing
-    reps, reps_sh, seq_walls = [], [], []
+    reps, reps_pl, reps_sh, reps_sh_rt, seq_walls = [], [], [], [], []
     for _ in range(2):
         engine = RenderEngine(cache, tile_rays=tile_rays)
         reps.append(loadgen.run_trace(engine, trace, mode="closed",
@@ -104,17 +116,32 @@ def run() -> dict:
             cache.get(req.scene_id).render_image(
                 ro, rd, rays_per_batch=tile_rays).block_until_ready()
         seq_walls.append(time.perf_counter() - t0)
+        # pipelined executor: same trace, depth >= 2 in-flight tile slots
+        engine_pl = RenderEngine(cache, tile_rays=tile_rays,
+                                 pipeline_depth=depth)
+        reps_pl.append(loadgen.run_trace(engine_pl, trace, mode="closed",
+                                         concurrency=4))
         engine_sh = RenderEngine(cache_sh, tile_rays=tile_rays)
         reps_sh.append(loadgen.run_trace(engine_sh, trace, mode="closed",
                                          concurrency=4))
+        # sharded + owner-map routing (and the pipelined executor):
+        # gather accounting is deterministic, timing rides the rounds
+        engine_sh_rt = RenderEngine(cache_sh, tile_rays=tile_rays,
+                                    pipeline_depth=depth,
+                                    route_by_shard=True)
+        reps_sh_rt.append(loadgen.run_trace(engine_sh_rt, trace,
+                                            mode="closed", concurrency=4))
     rep = min(reps, key=lambda r: r["wall_s"])
+    rep_pl = min(reps_pl, key=lambda r: r["wall_s"])
     rep_sh = min(reps_sh, key=lambda r: r["wall_s"])
+    rep_sh_rt = min(reps_sh_rt, key=lambda r: r["wall_s"])
     seq_wall = min(seq_walls)
 
     out = {
         "scenes": n_scenes, "requests": n_requests, "tile_rays": tile_rays,
         "req_per_s": rep["req_per_s"], "rays_per_s": rep["rays_per_s"],
         "latency_ms": rep["latency_ms"],
+        "queueing_ms": rep["queueing_ms"], "service_ms": rep["service_ms"],
         "dispatches": rep["engine"]["dispatches"],
         "dispatch_baseline": rep["engine"]["dispatch_baseline"],
         "dispatch_savings": rep["dispatch_savings"],
@@ -123,10 +150,33 @@ def run() -> dict:
         "engine_wall_s": rep["wall_s"],
         "speedup_engine_vs_sequential": round(seq_wall / rep["wall_s"], 2)
         if rep["wall_s"] else None,
+        # depth=1 vs depth>=2: the double-buffered async executor next to
+        # the synchronous loop it must be bit-identical to
+        "pipeline": {
+            "depth": depth,
+            "req_per_s": rep_pl["req_per_s"],
+            "latency_ms": rep_pl["latency_ms"],
+            "service_ms": rep_pl["service_ms"],
+            "max_in_flight": rep_pl["engine"]["max_in_flight"],
+            "req_per_s_depth1": rep["req_per_s"],
+            "speedup_vs_depth1": round(rep["wall_s"] / rep_pl["wall_s"], 2)
+            if rep_pl["wall_s"] else None,
+        },
         "sharding": {
             "devices": int(mesh.size),
             "weight_shards": n_shards,
             "req_per_s": rep_sh["req_per_s"],
+            # owner-map routing: modeled remote-layer gathers per trace,
+            # unrouted worst case vs home-cell-routed (engine stats)
+            "gather_layers_unrouted":
+                rep_sh["engine"]["plcore_gather_count"],
+            "gather_layers_routed":
+                rep_sh_rt["engine"]["plcore_gather_count"],
+            "gather_mb_unrouted": round(
+                rep_sh["engine"]["plcore_gather_bytes"] / (1 << 20), 3),
+            "gather_mb_routed": round(
+                rep_sh_rt["engine"]["plcore_gather_bytes"] / (1 << 20), 3),
+            "req_per_s_routed": rep_sh_rt["req_per_s"],
             # measured as deployed: sharded residents hold raw heads +
             # the layer-sharded trunk stacks, the replicated baseline
             # raw params only — a layout difference (128-row stack
@@ -146,12 +196,19 @@ def run() -> dict:
         },
     }
     emit("serving/req_per_s", 0.0, f"req_per_s={out['req_per_s']}")
+    emit("serving/pipelined_req_per_s", 0.0,
+         f"depth{depth}_req_per_s={out['pipeline']['req_per_s']}")
     emit("serving/sharded_req_per_s", 0.0,
          f"req_per_s={out['sharding']['req_per_s']}")
     emit("serving/latency_p50_ms", out["latency_ms"]["p50"],
          f"p99={out['latency_ms']['p99']}")
+    emit("serving/queueing_p50_ms", out["queueing_ms"]["p50"],
+         f"service_p50={out['service_ms']['p50']}")
     emit("serving/dispatch_savings", 0.0,
          f"{out['dispatches']}_vs_{out['dispatch_baseline']}")
+    emit("serving/gather_layers", 0.0,
+         f"routed_{out['sharding']['gather_layers_routed']}"
+         f"_vs_unrouted_{out['sharding']['gather_layers_unrouted']}")
     emit("serving/speedup_vs_sequential", 0.0,
          f"x{out['speedup_engine_vs_sequential']}")
     return out

@@ -25,14 +25,25 @@ echo "== serving engine smoke (3 scenes, deterministic trace) =="
 python -m repro.launch.serve --mode engine --scenes 3 --requests 9 \
     --hw-mix 12,16 --tile-rays 128 --loop closed --seed 0 --check
 
-echo "== sharded-weights engine smoke (8 fake CPU devices) =="
-# same gate with mesh-sharded weight residency: 8 fake host devices,
-# trunk stacks 4-way layer-sharded (tiny cfg has 4 trunk layers), every
-# render re-gathering layers inside the cached programs
+echo "== pipelined engine smoke (depth-3 async executor) =="
+# same trace through the double-buffered executor; --check additionally
+# asserts pipelining engaged (>= 2 tiles in flight) and that the
+# framebuffers are BIT-IDENTICAL to a synchronous depth=1 rerun
+python -m repro.launch.serve --mode engine --scenes 3 --requests 9 \
+    --hw-mix 12,16 --tile-rays 128 --loop closed --seed 0 \
+    --pipeline-depth 3 --check
+
+echo "== routed sharded engine smoke (8 fake CPU devices, depth 2) =="
+# mesh-sharded weight residency + shard-owner tile routing + pipelined
+# executor: 8 fake host devices, trunk stacks 4-way layer-sharded (tiny
+# cfg has 4 trunk layers); --check asserts the split engaged
+# (weight_shards > 1), depth-2 bit-identity vs depth 1, and that routing
+# strictly reduced the engine's plcore_gather_count vs an unrouted rerun
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m repro.launch.serve --mode engine --scenes 3 --requests 9 \
     --hw-mix 12,16 --tile-rays 128 --loop closed --seed 0 \
-    --shard-weights --shard-devices 4 --check
+    --shard-weights --shard-devices 4 --route-by-shard \
+    --pipeline-depth 2 --check
 
 echo "== docs link check =="
 python scripts/check_docs_links.py

@@ -27,7 +27,12 @@ call. This module is the weight-stationary restatement:
 * ``PackedPlcore.render_tile`` — the tile-stream entry point for the
   multi-tenant serving engine (repro.serving.engine): one pre-coalesced
   fixed-shape ray tile in, pixels out, same per-tile body as the image
-  program so cross-request coalescing is invisible in the output.
+  program so cross-request coalescing is invisible in the output. The
+  call is NON-BLOCKING — jax async dispatch returns an un-materialized
+  device array, so a pipelined executor can have several tiles in flight
+  and only pay the host sync at its drain points
+  (``PackedPlcore.dispatch_tile`` is the explicit executor form: device
+  rgb + the per-tile gather-cost record in one call).
 * ``shard_mesh`` — mesh-sharded weight residency: the packed trunk
   stacks become the ONLY trunk copy, partitioned layer-wise over the
   ("pod","data") axes (runtime.sharding.shard_plcore_packed), so
@@ -232,6 +237,7 @@ class PackedPlcore:
         self.fuse_two_pass = fuse_two_pass
         self.ert_eps = cfg.ert_eps if ert_eps is None else float(ert_eps)
         self.shard_mesh = shard_mesh
+        self._gather_costs: dict = {}   # home_cell -> tile_gather_cost
         self.packed = None
         if use_kernel or shard_mesh is not None:
             from repro.kernels import ops as kops
@@ -304,3 +310,45 @@ class PackedPlcore:
         fn = _tile_fn(self.cfg, self.use_kernel, eps, self.fuse_two_pass,
                       self.shard_mesh)
         return fn(self.params, self.quant, self.packed, o_tile, d_tile)
+
+    def tile_gather_cost(self, home_cell: Optional[int] = None) -> dict:
+        """Per-dispatch weight-gather traffic of one ``render_tile`` call,
+        in the ``runtime.sharding`` owner-map model: every trunk layer the
+        tile's home cell does NOT own locally is one remote layer fetch
+        (an all-gather the dispatch pays), priced per stacked array of the
+        packed layout at its replicated per-layer bytes. ``home_cell=None``
+        (unrouted) owns nothing — the worst case; a routed tile's cost
+        shrinks by exactly the layers its home cell holds in local HBM.
+        Zero without a shard mesh (nothing to gather)."""
+        if self.shard_mesh is None or not self.packed:
+            return {"layers": 0, "bytes": 0}
+        key = home_cell
+        cost = self._gather_costs.get(key)
+        if cost is None:
+            from repro.runtime import sharding as rsh
+            layers = nbytes = 0
+            for p in self.packed.values():
+                for k, a in p.items():
+                    if not k.startswith("trunk"):
+                        continue
+                    n_remote = int((~rsh.plcore_owned_layer_mask(
+                        self.shard_mesh, a.shape[0], home_cell)).sum())
+                    layers += n_remote
+                    nbytes += n_remote * (a.nbytes // a.shape[0])
+            cost = {"layers": layers, "bytes": nbytes}
+            self._gather_costs[key] = cost
+        return dict(cost)
+
+    def dispatch_tile(self, o_tile, d_tile, *,
+                      home_cell: Optional[int] = None,
+                      ert_eps: Optional[float] = None):
+        """The pipelined executor's entry point: dispatch ONE coalesced
+        ray tile and return ``(rgb, gather_cost)`` — ``rgb`` an
+        UN-BLOCKED device array (jax async dispatch: the host returns as
+        soon as the program is enqueued, so the executor can dispatch
+        tile k+1 and scatter tile k-1 while the device computes tile k;
+        materialize with ``np.asarray`` only at a drain point) and
+        ``gather_cost`` the ``tile_gather_cost(home_cell)`` record this
+        dispatch is accounted at."""
+        return (self.render_tile(o_tile, d_tile, ert_eps=ert_eps),
+                self.tile_gather_cost(home_cell))

@@ -43,11 +43,25 @@ Two services:
   the per-request baseline, and cache hit/miss/eviction counters.
   ``--loop open`` replays arrival times faithfully (queueing delay in the
   tail); ``--loop closed`` holds ``--concurrency`` in flight
-  (deterministic — the CI mode). ``--check`` exits nonzero unless every
-  request completed, the cache hit rate is > 0, coalescing issued no
-  more dispatches than the per-request baseline and — under
-  ``--shard-weights`` — the layer split actually engaged
-  (weight_shards > 1, catching silent replicated fallback). ``--kernel``,
+  (deterministic — the CI mode). Reports split request latency into
+  queueing delay vs service time (p50/p95/p99 each).
+  ``--pipeline-depth N`` gives the executor N in-flight tile slots
+  (double-buffered async dispatch: host scatter of tile k-1 overlaps
+  device compute of tile k; depth 1 is the synchronous baseline);
+  ``--route-by-shard`` (with ``--shard-weights``) routes each scene's
+  tiles to the mesh cell owning most of its trunk layers so the modeled
+  per-dispatch weight gathers shrink with locality. ``--check`` exits
+  nonzero unless every request completed, the cache hit rate is > 0,
+  coalescing issued no more dispatches than the per-request baseline,
+  — under ``--shard-weights`` — the layer split actually engaged
+  (weight_shards > 1, catching silent replicated fallback), — with
+  ``--pipeline-depth >= 2`` — the framebuffers are bit-identical to a
+  depth=1 rerun of the same trace, and — with ``--route-by-shard``
+  (which requires ``--shard-weights``) — the unrouted rerun's images
+  match too. The counter gates (pipelining actually held >= 2 tiles in
+  flight; routing strictly reduced plcore_gather_count vs unrouted) are
+  additionally enforced under ``--loop closed``, where the engine walk
+  is clockless-deterministic. ``--kernel``,
   ``--fuse-two-pass``, ``--rmcm``, ``--ert``, ``--vmem-budget-mb`` and
   ``--shard-weights``/``--shard-devices`` apply to the engine's render
   path exactly as in ``--mode nerf`` — with sharding the cache stores
@@ -225,6 +239,9 @@ def serve_engine(args) -> dict:
         cfg = replace(cfg, kernel_vmem_budget_mb=args.vmem_budget_mb)
     if args.fuse_two_pass and not args.kernel:
         raise SystemExit("--fuse-two-pass requires --kernel")
+    if args.route_by_shard and not args.shard_weights:
+        raise SystemExit("--route-by-shard routes tiles by sharded-weight "
+                         "ownership; it requires --shard-weights")
     shard_mesh = _shard_mesh_from_args(args)
 
     scene_ids = [f"scene{i}" for i in range(args.scenes)]
@@ -245,7 +262,12 @@ def serve_engine(args) -> dict:
                             shard_mesh=shard_mesh)
 
     cache = SceneCache(load_scene, capacity_mb=args.cache_mb)
-    engine = RenderEngine(cache, tile_rays=args.tile_rays)
+
+    def make_engine(depth, routed):
+        return RenderEngine(cache, tile_rays=args.tile_rays,
+                            pipeline_depth=depth, route_by_shard=routed)
+
+    engine = make_engine(args.pipeline_depth, args.route_by_shard)
     trace = loadgen.poisson_trace(
         args.requests, scene_ids, rate_rps=args.rate,
         hw_choices=tuple(int(h) for h in args.hw_mix.split(",")),
@@ -256,7 +278,9 @@ def serve_engine(args) -> dict:
     stats = {"scenes": args.scenes, "tile_rays": args.tile_rays,
              "kernel": bool(args.kernel),
              "fuse_two_pass": bool(args.fuse_two_pass),
-             "ert_eps": cfg.ert_eps, **stats}
+             "ert_eps": cfg.ert_eps,
+             "pipeline_depth": args.pipeline_depth,
+             "route_by_shard": bool(args.route_by_shard), **stats}
     if shard_mesh is not None:
         from repro.runtime import sharding as rsh
         stats["shard_devices"] = int(shard_mesh.size)
@@ -281,6 +305,47 @@ def serve_engine(args) -> dict:
                 f"(weight_shards={stats['weight_shards']} on "
                 f"{stats['shard_devices']} devices; the mesh size must "
                 f"divide trunk_layers={cfg.trunk_layers})")
+        # gates below rerun the trace on a reference engine and compare
+        # framebuffers bit-for-bit (rids align: every run submits in
+        # trace order; per-ray independence makes images depth- and
+        # routing-invariant even when the tile partition differs)
+        def rerun_and_compare(depth, routed, label):
+            ref = make_engine(depth, routed)
+            loadgen.run_trace(ref, trace, mode=args.loop,
+                              concurrency=args.concurrency)
+            for rid, res in engine.completed.items():
+                if not np.array_equal(res.image, ref.completed[rid].image):
+                    raise SystemExit(f"engine check: image for request "
+                                     f"{rid} differs from the {label} "
+                                     f"reference render")
+            return ref
+
+        # the occupancy and gather-count gates compare counters across
+        # runs, which is only deterministic in the clockless closed loop
+        # (open-loop arrival timing changes the tile partition run to
+        # run); the bit-identity comparisons hold in either mode
+        deterministic = args.loop == "closed"
+        if args.pipeline_depth > 1:
+            if deterministic and stats["engine"]["max_in_flight"] < 2:
+                raise SystemExit("engine check: pipeline_depth "
+                                 f"{args.pipeline_depth} never had 2 "
+                                 "tiles in flight — async dispatch "
+                                 "pipelining did not engage")
+            rerun_and_compare(1, args.route_by_shard,
+                              "synchronous depth=1")
+        if args.route_by_shard and shard_mesh is not None:
+            # routing gate: owner-map tile routing must strictly shrink
+            # the modeled cross-device gather traffic vs the same trace
+            # unrouted (every tile's home cell owns >= 1 trunk layer)
+            unrouted = rerun_and_compare(args.pipeline_depth, False,
+                                         "unrouted")
+            routed_g = stats["engine"]["plcore_gather_count"]
+            unrouted_g = unrouted.stats["plcore_gather_count"]
+            if deterministic and not routed_g < unrouted_g:
+                raise SystemExit(
+                    f"engine check: --route-by-shard did not reduce "
+                    f"plcore_gather_count (routed {routed_g} vs unrouted "
+                    f"{unrouted_g})")
         print("engine check OK")
     return stats
 
@@ -383,6 +448,19 @@ def build_parser():
     ap.add_argument("--loop", choices=["open", "closed"], default="open")
     ap.add_argument("--concurrency", type=int, default=4,
                     help="closed-loop in-flight request count")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="executor in-flight tile slots: 1 = synchronous "
+                         "dispatch->block->scatter (the bit-identity "
+                         "baseline), >= 2 overlaps host coalescing/"
+                         "scatter with device compute via jax async "
+                         "dispatch")
+    ap.add_argument("--route-by-shard", action="store_true",
+                    help="owner-map tile routing (with --shard-weights): "
+                         "pin each scene's tiles to a mesh cell owning "
+                         "the most of its trunk layers, so the modeled "
+                         "per-dispatch weight gathers shrink with "
+                         "locality (engine stats plcore_gather_count/"
+                         "_bytes)")
     ap.add_argument("--hw-mix", default="16,32",
                     help="comma list of request resolutions")
     ap.add_argument("--priority-mix", default="0",

@@ -243,16 +243,80 @@ def shard_plcore_packed(packed: dict, mesh: Mesh) -> dict:
     return out
 
 
+# ------------------------------------------------- PLCore owner map -------
+# ICARUS §5 scales by putting a ray dispatcher in front of many PLCores;
+# which cell a tile lands on decides which weight layers it reads locally
+# vs fetches across the interconnect. The owner map is the dispatcher's
+# view of the layer-sharded residency above: for every mesh cell (device),
+# which trunk layers its HBM holds. The serving scheduler scores candidate
+# tiles/scenes by owner overlap (route-by-shard) and the per-dispatch
+# gather accounting prices only the layers the home cell must fetch
+# REMOTELY — so modeled cross-device weight traffic shrinks with locality,
+# not just residency. (The SPMD emulation still computes mesh-wide and
+# replicates every layer — placement only, pixels bit-identical; the
+# owner map is the traffic model a hardware dispatcher would minimize.)
+
+
+def plcore_owner_table(mesh: Mesh, n_layers: int) -> np.ndarray:
+    """(n_devices, n_layers) bool ownership matrix: entry [c, l] is True
+    when mesh cell ``c`` (flat ``mesh.devices`` order) holds layer ``l``
+    of a ``plcore_stack_spec``-sharded trunk stack in local HBM. A
+    replicated (non-dividing) fallback owns everything everywhere."""
+    spec = plcore_stack_spec(mesh, n_layers)
+    sh = NamedSharding(mesh, spec)
+    devs = list(mesh.devices.flat)
+    pos = {d: i for i, d in enumerate(devs)}
+    table = np.zeros((len(devs), n_layers), bool)
+    for dev, idx in sh.devices_indices_map((n_layers,)).items():
+        table[pos[dev], idx[0]] = True
+    return table
+
+
+def plcore_locality_scores(mesh: Mesh, n_layers: int) -> np.ndarray:
+    """Per-cell routing score: how many trunk layers each mesh cell owns
+    locally. The scheduler routes a tile to an argmax cell — every layer
+    that cell owns is one all-gather the dispatch does not pay."""
+    return plcore_owner_table(mesh, n_layers).sum(axis=1)
+
+
+def plcore_home_cell(mesh: Mesh, n_layers: int, salt: str = "") -> int:
+    """Pick the home cell for one scene's tiles: a cell owning the
+    maximal number of that scene's trunk layers. Ties (the equal-shard
+    common case) break by a stable hash of ``salt`` (scene id), so
+    concurrent scenes spread over the owning cells deterministically —
+    same trace, same routing, every run."""
+    import zlib
+    scores = plcore_locality_scores(mesh, n_layers)
+    ties = np.flatnonzero(scores == scores.max())
+    return int(ties[zlib.crc32(salt.encode()) % len(ties)])
+
+
+def plcore_owned_layer_mask(mesh: Mesh, n_layers: int,
+                            cell: Optional[int] = None) -> np.ndarray:
+    """(n_layers,) bool: layers resident in cell ``cell``'s local HBM
+    (``None`` — no routing decision — owns nothing: every layer is a
+    remote fetch, the unrouted worst case the gather accounting prices)."""
+    if cell is None:
+        return np.zeros(n_layers, bool)
+    return plcore_owner_table(mesh, n_layers)[int(cell)]
+
+
 # Per-layer gather counter — kernels.ops.pack_count trace-time semantics:
 # ticks once per layer per stacked array when a render program TRACES;
 # cached program re-runs tick nothing. Tests pin the just-in-time gather
 # structure (L independent collectives, not one monolithic all-gather)
-# through this counter.
+# through this counter. ``_PLCORE_GATHER_BYTES`` ticks alongside with the
+# replicated per-layer bytes — the modeled gathered-layer traffic.
 _PLCORE_GATHER_COUNT = 0
+_PLCORE_GATHER_BYTES = 0
 
 
 def plcore_gather_count() -> int:
     return _PLCORE_GATHER_COUNT
+
+
+def plcore_gather_bytes() -> int:
+    return _PLCORE_GATHER_BYTES
 
 
 def gather_plcore_stack(stack, mesh: Mesh):
@@ -261,11 +325,13 @@ def gather_plcore_stack(stack, mesh: Mesh):
     individually, so XLA sees L independent collectives it can schedule
     just-in-time — layer i's gather overlaps the layer i-1 matmul —
     instead of one monolithic all-gather blocking the whole trunk."""
-    global _PLCORE_GATHER_COUNT
+    global _PLCORE_GATHER_COUNT, _PLCORE_GATHER_BYTES
     repl = NamedSharding(mesh, P())
+    per_layer = int(np.prod(stack.shape[1:])) * stack.dtype.itemsize
     layers = []
     for i in range(stack.shape[0]):
         _PLCORE_GATHER_COUNT += 1
+        _PLCORE_GATHER_BYTES += per_layer
         layers.append(jax.lax.with_sharding_constraint(stack[i], repl))
     return jnp.stack(layers)
 

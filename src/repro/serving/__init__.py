@@ -3,19 +3,30 @@
 
 The paper scales rendering by tiling PLCores behind a ray dispatcher
 (ICARUS §5, Fig. 1); this package is the host-side restatement of that
-dispatcher for many *concurrent requests over many scenes*:
+dispatcher for many *concurrent requests over many scenes*, split into
+three explicit layers (see ``engine``'s module docstring for the
+dataflow):
 
-* ``engine``       — request queue + continuous-batching loop that
-                     coalesces rays across requests into fixed-shape
-                     tiles (Cicero-style cross-frame scheduling).
+* ``engine``       — ``TileScheduler`` (queue, priority/sticky policy,
+                     cross-request ray coalescing, shard-locality tile
+                     routing) -> ``TileExecutor`` (double-buffered
+                     async-dispatch slots over jax async dispatch) ->
+                     ``CompletionSink`` (out-of-order framebuffer
+                     scatter), behind the ``RenderEngine`` façade.
 * ``scene_cache``  — LRU of resident ``PackedPlcore`` weight sets so one
                      process serves many scenes (FlexNeRFer-style
-                     multi-model residency).
+                     multi-model residency), with in-flight pin
+                     refcounts so eviction can't drop weights under a
+                     dispatched tile.
 * ``loadgen``      — synthetic open/closed-loop client (Poisson
                      arrivals, mixed resolutions) reporting throughput
-                     and tail latency.
+                     and tail latency, split into queueing delay vs
+                     service time.
 """
-from repro.serving.engine import RenderEngine, RenderRequest, RenderResult
+from repro.serving.engine import (CompletionSink, RenderEngine,
+                                  RenderRequest, RenderResult,
+                                  TileExecutor, TileScheduler)
 from repro.serving.scene_cache import SceneCache
 
-__all__ = ["RenderEngine", "RenderRequest", "RenderResult", "SceneCache"]
+__all__ = ["RenderEngine", "RenderRequest", "RenderResult", "SceneCache",
+           "TileScheduler", "TileExecutor", "CompletionSink"]

@@ -1,44 +1,51 @@
-"""Multi-tenant render engine: request queue + continuous ray batching.
+"""Multi-tenant render engine: scheduler / executor / completion layers.
 
 ICARUS §5 scales by putting a ray dispatcher in front of many PLCores;
 Cicero (2404.11852) shows that once the per-sample kernel is fused, the
-remaining throughput lever is *scheduling* — keeping every tile full by
-mixing rays from whatever work is queued. ``RenderEngine`` is that
-dispatcher for concurrent multi-scene traffic:
+remaining throughput levers are *scheduling* and *memory traffic*. The
+engine is that dispatcher, decomposed into three explicit layers so each
+lever has one home:
 
-* ``submit`` enqueues a ``RenderRequest`` (scene id + camera + resolution
-  + priority) and allocates its framebuffer (NaN-filled: every pixel must
+* ``TileScheduler`` — the policy layer. Owns the request queue
+  (``submit`` allocates a NaN-filled framebuffer: every pixel must
   arrive via a tile scatter, so gaps or cross-request leaks surface as
-  NaN instead of silently reading as black).
-* ``step`` runs ONE continuous-batching iteration: pick the scene of the
-  best (priority, FIFO) pending request — sticky to the current scene at
-  equal priority so queued tiles group by scene and the weight cache
-  stays hot — fill one fixed-shape tile of ``tile_rays`` rays from that
-  scene's pending requests in queue order, pad only a tail tile, dispatch
-  through ``PackedPlcore.render_tile`` (the cached tile-stream program —
-  the same per-tile body as ``render_image``, so coalescing is invisible
-  in the output), and scatter the pixels back to each contributing
-  request's framebuffer. Requests complete OUT OF ORDER as their last ray
-  lands.
-* ``stats`` carries the coalescing accounting (`kernels.ops` counter
-  style): ``dispatches`` actually issued vs ``dispatch_baseline`` — the
-  sum of per-request ``ceil(n_rays / tile_rays)`` a request-at-a-time
-  server would have paid. Coalescing wins whenever request sizes don't
-  divide the tile.
+  NaN instead of silently reading as black), picks the next scene by
+  (priority, FIFO) with sticky-scene grouping, coalesces one fixed-shape
+  tile of ``tile_rays`` rays across that scene's pending requests (pad
+  only the tail), and — with ``route_by_shard`` — routes the tile to a
+  *home cell*: the mesh device owning the most of that scene's trunk
+  layers (``runtime.sharding`` owner-map API), so the modeled
+  cross-device weight gathers shrink with locality, not just residency.
+* ``TileExecutor`` — the dispatch layer. Keeps up to ``pipeline_depth``
+  tiles in flight: ``PackedPlcore.dispatch_tile`` returns an UN-BLOCKED
+  device array (jax async dispatch), so the executor dispatches tile k+1
+  and drains tile k−(depth−1) while the device computes the tiles in
+  between — host coalescing/scatter overlaps device compute instead of
+  alternating with it. ``pipeline_depth=1`` flushes every dispatch
+  immediately and reduces EXACTLY to the synchronous
+  dispatch→block→scatter loop (the bit-identity anchor CI pins). The
+  executor pins each tile's scene in the ``SceneCache`` for the life of
+  the slot, so eviction can never drop weights under an in-flight
+  dispatch, and accounts every dispatch's owner-map gather cost into
+  ``stats`` (``plcore_gather_count`` / ``plcore_gather_bytes``).
+* ``CompletionSink`` — the output layer. Materializes a drained tile's
+  pixels, scatters them to each contributing request's framebuffer and
+  completes requests OUT OF ORDER as their last ray lands — semantics
+  identical to the synchronous engine.
 
-The engine is deliberately synchronous: it is the scheduling layer that
-later scaling PRs (async device streams, multi-host) plug into, not a
-thread pool. Mesh-sharded weight residency already plugs in underneath
-it with NO engine change: a ``SceneCache`` loader that builds
-``PackedPlcore(..., shard_mesh=...)`` residents stores each scene's
-trunk stacks partitioned over the mesh (the cache's per-device byte
-accounting then fits ~n_shards x more scenes), and ``render_tile``
-re-gathers layers inside its cached program — scene-grouped tiles route
-through unchanged and the scattered pixels stay bit-identical.
+``RenderEngine`` is the façade wiring the three together behind the same
+``submit``/``step``/``drain``/``take`` surface as before. Because every
+per-ray op depends only on its own ray, the per-request images are
+bit-identical across pipeline depths and routing choices even when the
+tile partition differs — only throughput and the traffic accounting
+move. Mesh-sharded weight residency still plugs in underneath via the
+``SceneCache`` loader; routing only adds a scheduler-side placement
+decision on top of it.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
@@ -69,6 +76,7 @@ class RenderResult:
     image: np.ndarray            # (hw, hw, 3) float32
     n_rays: int
     submit_s: float              # engine-clock timestamps
+    service_start_s: float       # first ray handed to a tile
     complete_s: float
     dispatch_baseline: int       # tiles a request-at-a-time server pays
 
@@ -76,11 +84,23 @@ class RenderResult:
     def latency_s(self) -> float:
         return self.complete_s - self.submit_s
 
+    @property
+    def queueing_s(self) -> float:
+        """Time spent waiting in the queue before the scheduler handed
+        the first ray to a tile."""
+        return self.service_start_s - self.submit_s
+
+    @property
+    def service_s(self) -> float:
+        """First-ray-dispatched -> last-pixel-scattered."""
+        return self.complete_s - self.service_start_s
+
 
 class _Active:
     """Queue entry: request + flattened rays + framebuffer + cursors."""
     __slots__ = ("req", "rid", "seq", "rays_o", "rays_d", "fb",
-                 "next_ray", "n_done", "n_rays", "submit_s")
+                 "next_ray", "n_done", "n_rays", "submit_s",
+                 "service_start_s")
 
     def __init__(self, req: RenderRequest, rid: int, seq: int, now: float):
         self.req, self.rid, self.seq, self.submit_s = req, rid, seq, now
@@ -94,17 +114,36 @@ class _Active:
         self.fb = np.full((self.n_rays, 3), np.nan, np.float32)
         self.next_ray = 0            # rays handed to tiles so far
         self.n_done = 0              # rays scattered back so far
+        self.service_start_s = None  # set when the first ray is tiled
+
+    @property
+    def remaining(self) -> int:
+        return self.n_rays - self.next_ray
 
 
-class RenderEngine:
-    """Continuous-batching serving loop over a ``SceneCache``.
+@dataclass
+class _Tile:
+    """One coalesced dispatch unit flowing scheduler -> executor ->
+    completion. ``spans`` records which request contributed which rays,
+    so the completion layer can scatter out of order."""
+    scene_id: str
+    pp: object                              # resident PackedPlcore
+    spans: List[tuple]                      # (_Active, start, take)
+    rays_o: np.ndarray
+    rays_d: np.ndarray
+    n_real: int                             # non-pad rays
+    home_cell: Optional[int] = None         # shard-locality routing
 
-    ``tile_rays`` is the fixed dispatch shape — every tile that reaches
-    the device has exactly this many rays (the compiled tile program is
-    reused forever), and only a tail tile carries padding."""
 
-    def __init__(self, cache: SceneCache, *, tile_rays: int = 512,
-                 max_sticky_tiles: int = 64, clock=time.perf_counter):
+# ---------------------------------------------------------------------------
+class TileScheduler:
+    """Layer 1 — policy. Queue, priority/sticky-scene scene pick, tile
+    coalescing, and shard-locality routing. Produces ``_Tile``s; never
+    touches the device."""
+
+    def __init__(self, cache: SceneCache, *, tile_rays: int,
+                 max_sticky_tiles: int, route_by_shard: bool,
+                 stats: dict, clock):
         self.cache = cache
         self.tile_rays = int(tile_rays)
         # stickiness bound: after this many consecutive tiles for one
@@ -112,30 +151,14 @@ class RenderEngine:
         # residency amortizes, but an early request for another scene
         # can't be starved forever by a stream of same-priority arrivals
         self.max_sticky_tiles = int(max_sticky_tiles)
+        self.route_by_shard = bool(route_by_shard)
+        self.stats = stats
         self._clock = clock
-        self._queue: List[_Active] = []
+        self.queue: List[_Active] = []
         self._seq = 0
         self._current_scene: Optional[str] = None
         self._sticky_run = 0         # consecutive tiles for current scene
-        self.completed: Dict[int, RenderResult] = {}
-        self.completion_order: List[int] = []
-        self.stats = {
-            "dispatches": 0,            # tiles actually issued
-            "dispatch_baseline": 0,     # sum ceil(n_rays/tile) per request
-            "rays_rendered": 0,         # real rays scattered back
-            "padded_rays": 0,           # tail-tile filler rays
-            "scene_switches": 0,        # resident-weight changes
-            "requests_completed": 0,
-        }
-
-    # ------------------------------------------------------------ queue ----
-    @property
-    def pending(self) -> int:
-        return len(self._queue)
-
-    @property
-    def pending_rays(self) -> int:
-        return sum(a.n_rays - a.next_ray for a in self._queue)
+        self._home_cells: Dict[str, int] = {}   # scene -> routed cell
 
     def submit(self, req: RenderRequest) -> int:
         """Enqueue a request; returns its request id."""
@@ -144,37 +167,65 @@ class RenderEngine:
                              f"hw={req.hw}")
         rid = self._seq
         self._seq += 1
-        self._queue.append(_Active(req, rid, rid, self._clock()))
-        self.stats["dispatch_baseline"] += -(-self._queue[-1].n_rays
+        self.queue.append(_Active(req, rid, rid, self._clock()))
+        self.stats["dispatch_baseline"] += -(-self.queue[-1].n_rays
                                              // self.tile_rays)
         return rid
+
+    def remove(self, a: _Active) -> None:
+        self.queue.remove(a)
 
     def _rank(self, a: _Active):
         return (-a.req.priority, a.seq)
 
-    def _pick_scene(self) -> str:
-        """Scene of the best-ranked pending request — but sticky to the
-        current scene while it still has queued rays at the same top
+    def _schedulable(self) -> List[_Active]:
+        """Requests that still have rays to hand out. Entries whose rays
+        are all in flight (dispatched, not yet scattered) stay queued but
+        must not influence scene choice — that keeps scheduling decisions
+        independent of WHEN the executor drains, so any pipeline depth
+        walks the same policy path."""
+        return [a for a in self.queue if a.remaining > 0]
+
+    def _pick_scene(self, cands: List[_Active]) -> str:
+        """Scene of the best-ranked schedulable request — but sticky to
+        the current scene while it still has queued rays at the same top
         priority, so consecutive tiles group by scene (weight residency
         amortizes); a strictly higher-priority request preempts, and
         ``max_sticky_tiles`` bounds how long an equal-priority request
         for another scene can be bypassed."""
-        best = min(self._queue, key=self._rank)
+        best = min(cands, key=self._rank)
         if (self._current_scene is not None
                 and self._sticky_run < self.max_sticky_tiles):
-            mine = [a.req.priority for a in self._queue
+            mine = [a.req.priority for a in cands
                     if a.req.scene_id == self._current_scene]
             if mine and best.req.priority <= max(mine):
                 return self._current_scene
         return best.req.scene_id
 
-    # ------------------------------------------------------------- loop ----
-    def step(self) -> bool:
-        """One continuous-batching iteration: coalesce one tile, dispatch,
-        scatter. Returns False when the queue is idle."""
-        if not self._queue:
-            return False
-        scene = self._pick_scene()
+    def _route(self, scene_id: str, pp) -> Optional[int]:
+        """Shard-locality routing: the tile's home cell is a mesh device
+        owning the maximal share of this scene's trunk layers (owner-map
+        API); scenes spread deterministically over tied owners. Every
+        layer the home cell owns is a remote gather this scene's
+        dispatches don't pay. ``None`` (unrouted) when routing is off or
+        the resident isn't mesh-sharded."""
+        if not self.route_by_shard or getattr(pp, "shard_mesh", None) is None:
+            return None
+        home = self._home_cells.get(scene_id)
+        if home is None:
+            from repro.runtime import sharding as rsh
+            home = rsh.plcore_home_cell(pp.shard_mesh, pp.cfg.trunk_layers,
+                                        salt=scene_id)
+            self._home_cells[scene_id] = home
+        return home
+
+    def next_tile(self) -> Optional[_Tile]:
+        """Coalesce ONE tile from the best scene's pending requests in
+        queue order; None when no request has rays left to hand out."""
+        cands = self._schedulable()
+        if not cands:
+            return None
+        scene = self._pick_scene(cands)
         if scene != self._current_scene:
             self.stats["scene_switches"] += 1
             self._current_scene = scene
@@ -182,13 +233,15 @@ class RenderEngine:
         self._sticky_run += 1
         pp = self.cache.get(scene)
 
-        # fill ONE tile from this scene's pending requests in queue order
+        now = self._clock()
         spans, chunks_o, chunks_d, n = [], [], [], 0
-        for a in sorted((a for a in self._queue
-                         if a.req.scene_id == scene), key=self._rank):
-            take = min(a.n_rays - a.next_ray, self.tile_rays - n)
+        for a in sorted((a for a in cands if a.req.scene_id == scene),
+                        key=self._rank):
+            take = min(a.remaining, self.tile_rays - n)
             if take <= 0:
                 continue
+            if a.service_start_s is None:
+                a.service_start_s = now
             spans.append((a, a.next_ray, take))
             chunks_o.append(a.rays_o[a.next_ray:a.next_ray + take])
             chunks_d.append(a.rays_d[a.next_ray:a.next_ray + take])
@@ -201,43 +254,207 @@ class RenderEngine:
             chunks_o.append(np.repeat(chunks_o[-1][-1:], pad, axis=0))
             chunks_d.append(np.repeat(chunks_d[-1][-1:], pad, axis=0))
             self.stats["padded_rays"] += pad
+        return _Tile(scene, pp, spans, np.concatenate(chunks_o),
+                     np.concatenate(chunks_d), n,
+                     home_cell=self._route(scene, pp))
 
-        rgb = np.asarray(pp.render_tile(jnp.asarray(np.concatenate(chunks_o)),
-                                        jnp.asarray(np.concatenate(chunks_d))))
-        self.stats["dispatches"] += 1
-        self.stats["rays_rendered"] += n
 
+# ---------------------------------------------------------------------------
+class TileExecutor:
+    """Layer 2 — dispatch. A ring of up to ``depth`` in-flight tile
+    slots over jax async dispatch: ``dispatch`` enqueues the device
+    program and returns without blocking; the oldest slot is drained
+    (host-synced and handed to completion) only when the ring is full or
+    at an explicit flush. ``depth=1`` drains every dispatch immediately —
+    exactly the synchronous loop."""
+
+    def __init__(self, completion: "CompletionSink", cache: SceneCache,
+                 stats: dict, depth: int = 1):
+        if depth < 1:
+            raise ValueError(f"pipeline depth must be >= 1, got {depth}")
+        self.completion = completion
+        self.cache = cache
+        self.stats = stats
+        self.depth = int(depth)
+        self._slots: deque = deque()    # (tile, un-blocked device rgb)
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._slots)
+
+    def dispatch(self, tile: _Tile) -> None:
+        """Issue one tile (non-blocking), pin its scene for the life of
+        the slot, account its gather traffic, then drain down to
+        ``depth - 1`` so at most ``depth`` programs are ever enqueued."""
+        rgb, cost = tile.pp.dispatch_tile(jnp.asarray(tile.rays_o),
+                                          jnp.asarray(tile.rays_d),
+                                          home_cell=tile.home_cell)
+        self.cache.pin(tile.scene_id)
+        self._slots.append((tile, rgb))
+        st = self.stats
+        st["dispatches"] += 1
+        st["rays_rendered"] += tile.n_real
+        st["plcore_gather_count"] += cost["layers"]
+        st["plcore_gather_bytes"] += cost["bytes"]
+        if tile.home_cell is not None:
+            st["routed_tiles"] += 1
+        st["max_in_flight"] = max(st["max_in_flight"], len(self._slots))
+        while len(self._slots) >= self.depth:
+            self.drain_one()
+
+    def drain_one(self) -> bool:
+        """Materialize the OLDEST in-flight tile (the only host sync in
+        the loop), scatter it, release its scene pin."""
+        if not self._slots:
+            return False
+        tile, rgb = self._slots.popleft()
+        self.completion.scatter(tile, np.asarray(rgb))
+        self.cache.unpin(tile.scene_id)
+        return True
+
+    def drain_all(self) -> None:
+        while self.drain_one():
+            pass
+
+
+# ---------------------------------------------------------------------------
+class CompletionSink:
+    """Layer 3 — output. Scatters drained tiles to per-request
+    framebuffers and completes requests out of order as their last ray
+    lands. Unchanged semantics from the synchronous engine."""
+
+    def __init__(self, scheduler: TileScheduler, stats: dict, clock):
+        self.scheduler = scheduler
+        self.stats = stats
+        self._clock = clock
+        self.completed: Dict[int, RenderResult] = {}
+        self.completion_order: List[int] = []
+
+    def scatter(self, tile: _Tile, rgb: np.ndarray) -> None:
         off = 0
-        for a, start, take in spans:
+        for a, start, take in tile.spans:
             a.fb[start:start + take] = rgb[off:off + take]
             a.n_done += take
             off += take
             if a.n_done == a.n_rays:
                 self._complete(a)
-        return True
 
     def _complete(self, a: _Active) -> None:
-        self._queue.remove(a)
+        self.scheduler.remove(a)
         hw = a.req.hw
         res = RenderResult(
             request_id=a.rid, scene_id=a.req.scene_id,
             image=a.fb.reshape(hw, hw, 3), n_rays=a.n_rays,
-            submit_s=a.submit_s, complete_s=self._clock(),
-            dispatch_baseline=-(-a.n_rays // self.tile_rays))
+            submit_s=a.submit_s,
+            service_start_s=(a.submit_s if a.service_start_s is None
+                             else a.service_start_s),
+            complete_s=self._clock(),
+            dispatch_baseline=-(-a.n_rays // self.scheduler.tile_rays))
         self.completed[a.rid] = res
         self.completion_order.append(a.rid)
         self.stats["requests_completed"] += 1
+
+
+# ---------------------------------------------------------------------------
+class RenderEngine:
+    """Continuous-batching serving loop over a ``SceneCache`` — the
+    scheduler/executor/completion stack behind one façade.
+
+    ``tile_rays`` is the fixed dispatch shape — every tile that reaches
+    the device has exactly this many rays (the compiled tile program is
+    reused forever), and only a tail tile carries padding.
+    ``pipeline_depth`` bounds the executor's in-flight slots (1 =
+    synchronous, bit-identical baseline; >= 2 overlaps host scatter with
+    device compute); ``route_by_shard`` turns on owner-map tile routing
+    for mesh-sharded residents."""
+
+    def __init__(self, cache: SceneCache, *, tile_rays: int = 512,
+                 max_sticky_tiles: int = 64, clock=time.perf_counter,
+                 pipeline_depth: int = 1, route_by_shard: bool = False):
+        self.cache = cache
+        self.stats = {
+            "dispatches": 0,            # tiles actually issued
+            "dispatch_baseline": 0,     # sum ceil(n_rays/tile) per request
+            "rays_rendered": 0,         # real rays dispatched
+            "padded_rays": 0,           # tail-tile filler rays
+            "scene_switches": 0,        # resident-weight changes
+            "requests_completed": 0,
+            "plcore_gather_count": 0,   # owner-map remote layer fetches
+            "plcore_gather_bytes": 0,   # ... and their bytes
+            "routed_tiles": 0,          # tiles with a home cell assigned
+            "max_in_flight": 0,         # peak executor slot occupancy
+        }
+        self.scheduler = TileScheduler(
+            cache, tile_rays=tile_rays, max_sticky_tiles=max_sticky_tiles,
+            route_by_shard=route_by_shard, stats=self.stats, clock=clock)
+        self.completion = CompletionSink(self.scheduler, self.stats, clock)
+        self.executor = TileExecutor(self.completion, cache, self.stats,
+                                     depth=pipeline_depth)
+
+    # ------------------------------------------------------------ queue ----
+    @property
+    def tile_rays(self) -> int:
+        return self.scheduler.tile_rays
+
+    @property
+    def pipeline_depth(self) -> int:
+        return self.executor.depth
+
+    @property
+    def pending(self) -> int:
+        """Requests not yet completed (queued, partially tiled, or fully
+        in flight awaiting their scatter)."""
+        return len(self.scheduler.queue)
+
+    @property
+    def pending_rays(self) -> int:
+        return sum(a.remaining for a in self.scheduler.queue)
+
+    @property
+    def in_flight_tiles(self) -> int:
+        return self.executor.in_flight
+
+    @property
+    def completed(self) -> Dict[int, RenderResult]:
+        return self.completion.completed
+
+    @property
+    def completion_order(self) -> List[int]:
+        return self.completion.completion_order
+
+    def submit(self, req: RenderRequest) -> int:
+        """Enqueue a request; returns its request id."""
+        return self.scheduler.submit(req)
+
+    # ------------------------------------------------------------- loop ----
+    def step(self) -> bool:
+        """One engine iteration: coalesce + dispatch the next tile if any
+        request still has rays to hand out, else drain one in-flight
+        slot. Returns False only when fully idle (no schedulable rays AND
+        nothing in flight). At ``pipeline_depth=1`` each step is exactly
+        the synchronous coalesce -> dispatch -> block -> scatter of the
+        pre-pipelined engine."""
+        tile = self.scheduler.next_tile()
+        if tile is not None:
+            self.executor.dispatch(tile)
+            return True
+        if self.executor.in_flight:
+            self.executor.drain_one()
+            return True
+        return False
 
     def take(self, request_id: int) -> RenderResult:
         """Pop a completed result, releasing its framebuffer. Long-running
         servers must consume results through this (``completed`` retains
         every image otherwise — fine for bounded traces/tests only)."""
-        return self.completed.pop(request_id)
+        return self.completion.completed.pop(request_id)
 
     def drain(self, max_steps: Optional[int] = None) -> int:
-        """Run until idle (or ``max_steps``); returns steps taken."""
+        """Run until idle — queue empty AND every in-flight slot flushed
+        (or ``max_steps``); returns steps taken."""
         steps = 0
-        while self._queue and (max_steps is None or steps < max_steps):
+        while ((self.scheduler.queue or self.executor.in_flight)
+               and (max_steps is None or steps < max_steps)):
             self.step()
             steps += 1
         return steps

@@ -15,7 +15,14 @@ modes against a ``RenderEngine``.
 
 Both report throughput (req/s, rays/s), p50/p95/p99 request latency, and
 the engine + scene-cache counters (dispatch savings vs the per-request
-baseline, cache hit rate).
+baseline, cache hit rate). Latency is additionally SPLIT into its two
+components, each with its own p50/p95/p99: ``queueing_ms`` (arrival — or
+submit, in the closed loop — until the scheduler hands the request's
+first ray to a tile: pure backlog) and ``service_ms`` (first ray tiled
+until the last pixel scatters: the engine's own work). Pipelining and
+routing improve service time; an open-loop arrival burst inflates only
+the queueing component — without the split, backlog masks the engine
+win.
 """
 from __future__ import annotations
 
@@ -64,7 +71,9 @@ def _percentiles_ms(latencies_s: Sequence[float]) -> dict:
 
 
 def _report(engine: RenderEngine, latencies_s: List[float],
-            wall_s: float, mode: str) -> dict:
+            wall_s: float, mode: str,
+            queueing_s: List[float] = (),
+            service_s: List[float] = ()) -> dict:
     st = dict(engine.stats)
     n = st["requests_completed"]
     return {
@@ -75,6 +84,11 @@ def _report(engine: RenderEngine, latencies_s: List[float],
         "rays_per_s": round(st["rays_rendered"] / wall_s, 1)
         if wall_s > 0 else None,
         "latency_ms": _percentiles_ms(latencies_s),
+        # latency = queueing (backlog before the first ray is tiled)
+        # + service (engine work) — split so a pipelining win in service
+        # time is visible under an arrival backlog
+        "queueing_ms": _percentiles_ms(queueing_s),
+        "service_ms": _percentiles_ms(service_s),
         "engine": st,
         "dispatch_savings": st["dispatch_baseline"] - st["dispatches"],
         "cache": engine.cache.stats(),
@@ -84,7 +98,9 @@ def _report(engine: RenderEngine, latencies_s: List[float],
 def run_open_loop(engine: RenderEngine, trace: List[TraceItem]) -> dict:
     """Wall-clock open loop: each request is submitted once its arrival
     time has passed; latency = completion - *arrival* (queueing delay
-    included). Idles sleep until the next arrival."""
+    included), split as queueing = first-ray-tiled - arrival and
+    service = completion - first-ray-tiled. Idles sleep until the next
+    arrival."""
     clock = time.perf_counter
     t0 = clock()
     arrivals = {}           # rid -> absolute arrival time
@@ -99,17 +115,21 @@ def run_open_loop(engine: RenderEngine, trace: List[TraceItem]) -> dict:
             time.sleep(max(0.0, min(trace[i].arrival_s - (clock() - t0),
                                     0.05)))
     wall = clock() - t0
-    lats = [engine.completed[rid].complete_s - t_arr
+    done = [(engine.completed[rid], t_arr)
             for rid, t_arr in arrivals.items() if rid in engine.completed]
-    return _report(engine, lats, wall, "open")
+    lats = [res.complete_s - t_arr for res, t_arr in done]
+    queueing = [max(0.0, res.service_start_s - t_arr) for res, t_arr in done]
+    service = [res.service_s for res, _ in done]
+    return _report(engine, lats, wall, "open", queueing, service)
 
 
 def run_closed_loop(engine: RenderEngine, trace: List[TraceItem],
                     concurrency: int = 4) -> dict:
     """Closed loop at fixed concurrency: arrival times ignored, the next
     trace request enters as one in flight completes; latency =
-    completion - submit. Deterministic given a deterministic clockless
-    engine path (the CI/bench mode)."""
+    completion - submit, split at the first-ray-tiled timestamp.
+    Deterministic given a deterministic clockless engine path (the
+    CI/bench mode)."""
     t0 = time.perf_counter()
     i, done0 = 0, len(engine.completion_order)
     while i < len(trace) or engine.pending:
@@ -118,9 +138,11 @@ def run_closed_loop(engine: RenderEngine, trace: List[TraceItem],
             i += 1
         engine.step()
     wall = time.perf_counter() - t0
-    lats = [engine.completed[rid].latency_s
+    done = [engine.completed[rid]
             for rid in engine.completion_order[done0:]]
-    return _report(engine, lats, wall, "closed")
+    return _report(engine, [r.latency_s for r in done], wall, "closed",
+                   [r.queueing_s for r in done],
+                   [r.service_s for r in done])
 
 
 def run_trace(engine: RenderEngine, trace: List[TraceItem], *,

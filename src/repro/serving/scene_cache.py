@@ -11,6 +11,11 @@ scene-grouped batching keeps touches clustered so residency is long.
 
 Capacity is in MB of actual array bytes (params + quant + packed kernel
 layout), not entry count — the quantity that competes for device memory.
+A resident with tiles in flight on the async executor is PINNED
+(``pin``/``unpin`` refcounts): eviction skips pinned entries, so a scene
+whose dispatched tiles have not yet drained can never lose its weights
+to a colder scene's load mid-flight. Unpinned entries evict LRU-first as
+before.
 The accounting is PER DEVICE: a replicated array costs its full size on
 every device (so it counts once, as before), but a mesh-sharded resident
 (``PackedPlcore(..., shard_mesh=...)`` — trunk stacks layer-partitioned
@@ -23,7 +28,7 @@ counters show it).
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Callable, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 
@@ -69,6 +74,7 @@ class SceneCache:
         self.capacity_bytes = int(capacity_mb * (1 << 20))
         self._entries: "OrderedDict[str, Tuple[PackedPlcore, int]]" = \
             OrderedDict()
+        self._pins: Dict[str, int] = {}
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -88,9 +94,30 @@ class SceneCache:
     def resident_bytes(self) -> int:
         return sum(nb for _, nb in self._entries.values())
 
+    def pin(self, scene_id: str) -> None:
+        """Refcount one in-flight use of a resident scene: a pinned entry
+        is skipped by eviction until its last ``unpin`` (the executor pins
+        at tile dispatch and unpins when the tile's scatter drains, so a
+        resident can never be evicted under an in-flight dispatch)."""
+        self._pins[scene_id] = self._pins.get(scene_id, 0) + 1
+
+    def unpin(self, scene_id: str) -> None:
+        n = self._pins.get(scene_id, 0) - 1
+        if n <= 0:
+            self._pins.pop(scene_id, None)
+        else:
+            self._pins[scene_id] = n
+
+    def pinned(self, scene_id: str) -> bool:
+        return scene_id in self._pins
+
     def get(self, scene_id: str) -> PackedPlcore:
         """Fetch a scene, loading (and possibly evicting) on miss. The
-        returned instance is resident until LRU eviction pushes it out."""
+        returned instance is resident until LRU eviction pushes it out;
+        pinned entries (in-flight tiles) and the just-inserted entry are
+        never eviction victims — a cache whose unpinned residents don't
+        cover the overflow stays over capacity until pins drain (the
+        counters show it)."""
         ent = self._entries.get(scene_id)
         if ent is not None:
             self.hits += 1
@@ -99,9 +126,13 @@ class SceneCache:
         self.misses += 1
         pp = self._loader(scene_id)
         self._entries[scene_id] = (pp, plcore_nbytes(pp))
-        while (len(self._entries) > 1
-               and self.resident_bytes > self.capacity_bytes):
-            self._entries.popitem(last=False)
+        for victim in list(self._entries):   # LRU -> MRU order
+            if (len(self._entries) <= 1
+                    or self.resident_bytes <= self.capacity_bytes):
+                break
+            if victim == scene_id or victim in self._pins:
+                continue
+            del self._entries[victim]
             self.evictions += 1
         return pp
 
@@ -112,6 +143,7 @@ class SceneCache:
             "evictions": self.evictions,
             "hit_rate": round(self.hits / total, 4) if total else 0.0,
             "resident_scenes": len(self._entries),
+            "pinned_scenes": len(self._pins),
             "resident_mb": round(self.resident_bytes / (1 << 20), 3),
             "capacity_mb": round(self.capacity_bytes / (1 << 20), 3),
         }

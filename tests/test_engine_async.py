@@ -1,0 +1,308 @@
+"""Scheduler/executor/completion engine layers: pipelined async dispatch,
+shard-locality routing, cache pinning, latency split.
+
+The load-bearing claims on top of test_serving.py's synchronous ones:
+(1) any ``pipeline_depth`` renders framebuffers BIT-IDENTICAL to the
+synchronous depth=1 loop (per-ray independence makes tile-partition
+differences invisible) while actually holding ``depth`` tiles in flight;
+(2) a scene with in-flight executor tiles is PINNED in the ``SceneCache``
+— eviction pressure from loading other scenes cannot drop its weights
+until the last slot drains; (3) owner-map routing strictly shrinks the
+engine's per-dispatch gather accounting (``plcore_gather_count/_bytes``)
+vs unrouted on the same trace, with identical pixels; (4) request latency
+splits exactly into queueing delay + service time. A subprocess leg
+re-asserts (1)+(3) on a REAL 4-way layer shard over 8 fake CPU devices.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.nerf_icarus import tiny
+from repro.core.pipeline import PackedPlcore
+from repro.core.plcore import plcore_decls
+from repro.models.params import init_params
+from repro.runtime import sharding as rsh
+from repro.serving import RenderEngine, RenderRequest, SceneCache
+from repro.serving import loadgen
+
+TILE = 64
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny()
+    param_sets = {
+        f"scene{i}": init_params(plcore_decls(cfg), jax.random.PRNGKey(i),
+                                 "float32")
+        for i in range(3)}
+    return cfg, param_sets
+
+
+def _engine(cfg, param_sets, **kw):
+    cache = SceneCache(lambda sid: PackedPlcore(cfg, param_sets[sid]),
+                       capacity_mb=kw.pop("capacity_mb", 256.0))
+    return RenderEngine(cache, tile_rays=kw.pop("tile_rays", TILE), **kw)
+
+
+MIXED = [RenderRequest("scene0", hw=10, theta=10.0),
+         RenderRequest("scene1", hw=12, theta=50.0),
+         RenderRequest("scene0", hw=10, theta=90.0),
+         RenderRequest("scene2", hw=16, theta=130.0),
+         RenderRequest("scene1", hw=10, theta=170.0),
+         RenderRequest("scene0", hw=12, theta=210.0)]
+
+
+# ------------------------------------------------ pipelined bit-identity ----
+def test_pipeline_depths_bit_identical(setup):
+    """Depths 1/2/3 over the same submitted-upfront trace: identical
+    scheduler decisions (dispatch/pad counts equal), identical images,
+    and the deep engines really pipeline (peak in-flight == depth)."""
+    cfg, param_sets = setup
+    runs = {}
+    for depth in (1, 2, 3):
+        eng = _engine(cfg, param_sets, pipeline_depth=depth)
+        rids = [eng.submit(r) for r in MIXED]
+        eng.drain()
+        assert eng.in_flight_tiles == 0
+        assert eng.stats["requests_completed"] == len(MIXED)
+        runs[depth] = (eng, rids)
+    base, base_rids = runs[1]
+    assert base.stats["max_in_flight"] == 1
+    for depth in (2, 3):
+        eng, rids = runs[depth]
+        # all requests queued before the first step -> the scheduler walks
+        # the same policy path at any depth
+        assert eng.stats["dispatches"] == base.stats["dispatches"]
+        assert eng.stats["padded_rays"] == base.stats["padded_rays"]
+        assert eng.stats["scene_switches"] == base.stats["scene_switches"]
+        assert eng.stats["max_in_flight"] == depth
+        for rid, brid in zip(rids, base_rids):
+            img = eng.completed[rid].image
+            assert np.isfinite(img).all()       # NaN fb: no gap, no leak
+            np.testing.assert_array_equal(img,
+                                          base.completed[brid].image)
+
+
+def test_step_makes_progress_while_in_flight(setup):
+    """With all rays handed out but tiles still in flight, step() must
+    drain (returning True) rather than stall or re-dispatch — and only
+    report idle once completion has consumed every slot."""
+    cfg, param_sets = setup
+    eng = _engine(cfg, param_sets, pipeline_depth=4)
+    rid = eng.submit(RenderRequest("scene0", hw=10))   # 100 rays = 2 tiles
+    assert eng.step() and eng.step()                   # both tiles dispatched
+    assert eng.in_flight_tiles == 2 and eng.pending == 1
+    assert eng.pending_rays == 0                       # all rays handed out
+    assert eng.step()                                  # drains tile 1
+    assert eng.in_flight_tiles == 1
+    assert eng.step()                                  # drains tile 2
+    assert eng.in_flight_tiles == 0 and eng.pending == 0
+    assert rid in eng.completed
+    assert not eng.step()                              # now truly idle
+
+
+# --------------------------------------------------------- cache pinning ----
+def test_inflight_scene_pinned_until_slots_drain(setup):
+    """Eviction pressure while a scene has in-flight executor tiles: the
+    resident must survive until its last slot drains, then become
+    evictable again."""
+    cfg, param_sets = setup
+    probe = PackedPlcore(cfg, param_sets["scene0"])
+    from repro.serving.scene_cache import plcore_nbytes
+    one = plcore_nbytes(probe) / (1 << 20)
+    cache = SceneCache(lambda sid: PackedPlcore(cfg, param_sets[sid]),
+                       capacity_mb=one * 1.25)         # fits ONE scene
+    eng = RenderEngine(cache, tile_rays=TILE, pipeline_depth=3)
+    eng.submit(RenderRequest("scene0", hw=10))         # 2 tiles
+    eng.submit(RenderRequest("scene1", hw=8))
+    assert eng.step() and eng.step()                   # scene0 fully in flight
+    assert cache.pinned("scene0") and eng.in_flight_tiles == 2
+    eng.step()    # scene1's load overflows the cache; scene0 is pinned
+    assert "scene0" in cache and cache.evictions == 0
+    assert cache.stats()["pinned_scenes"] >= 1
+    eng.drain()
+    assert not cache.pinned("scene0")                  # pins released
+    assert np.isfinite(eng.completed[0].image).all()
+    assert np.isfinite(eng.completed[1].image).all()
+    cache.get("scene2")      # now over-capacity eviction works again
+    assert cache.evictions >= 1 and "scene2" in cache
+
+
+def test_scene_cache_pin_refcounts():
+    """Unit semantics: pinned entries are skipped by eviction; refcounts
+    nest; unpinned LRU eviction is unchanged."""
+    from types import SimpleNamespace
+    blank = SimpleNamespace(params=None, quant=None, packed=None)
+    cache = SceneCache(lambda sid: blank, capacity_mb=0.0)
+    # capacity 0 -> every insert tries to evict everything unpinned
+    cache._entries["a"] = (blank, 1 << 20)
+    cache.pin("a")
+    cache.pin("a")
+    cache.get("b")
+    assert "a" in cache and cache.evictions == 0       # pinned survives
+    cache.unpin("a")
+    assert cache.pinned("a")                           # refcount nests
+    cache.unpin("a")
+    cache.get("c")
+    assert "a" not in cache and cache.evictions >= 1   # evictable again
+
+
+# ------------------------------------------------------ latency split -------
+def test_latency_splits_into_queueing_plus_service(setup):
+    cfg, param_sets = setup
+    eng = _engine(cfg, param_sets, pipeline_depth=2)
+    trace = loadgen.poisson_trace(6, list(param_sets), rate_rps=100.0,
+                                  hw_choices=(8, 12), seed=0)
+    rep = loadgen.run_trace(eng, trace, mode="closed", concurrency=3)
+    for key in ("latency_ms", "queueing_ms", "service_ms"):
+        assert set(rep[key]) == {"p50", "p95", "p99"}
+        assert all(v is not None and v >= 0 for v in rep[key].values())
+    for res in eng.completed.values():
+        assert res.queueing_s >= 0 and res.service_s >= 0
+        assert np.isclose(res.queueing_s + res.service_s, res.latency_s)
+
+
+# ---------------------------------------------------- routing accounting ----
+def test_owner_map_replicated_fallback_and_gather_cost(setup):
+    """On a 1-device mesh the stacks replicate: the lone cell owns every
+    layer, so a routed tile's modeled gather cost is 0 while the unrouted
+    worst case prices every trunk layer of both nets."""
+    cfg, param_sets = setup
+    mesh = rsh.plcore_mesh()
+    L = cfg.trunk_layers
+    assert rsh.plcore_owner_table(mesh, L).all()
+    assert rsh.plcore_locality_scores(mesh, L).tolist() == [L]
+    assert not rsh.plcore_owned_layer_mask(mesh, L).any()    # None = unrouted
+    pp = PackedPlcore(cfg, param_sets["scene0"], shard_mesh=mesh)
+    unrouted = pp.tile_gather_cost()
+    assert unrouted["layers"] == 2 * 2 * L        # (w,b) x (coarse,fine)
+    assert unrouted["bytes"] > 0
+    routed = pp.tile_gather_cost(rsh.plcore_home_cell(mesh, L, "scene0"))
+    assert routed == {"layers": 0, "bytes": 0}
+    # unsharded residents gather nothing either way
+    assert PackedPlcore(cfg, param_sets["scene0"]).tile_gather_cost() == \
+        {"layers": 0, "bytes": 0}
+
+
+def test_dispatch_tile_matches_render_tile(setup):
+    cfg, param_sets = setup
+    pp = PackedPlcore(cfg, param_sets["scene0"])
+    from repro.data import rays as R
+    ro, rd = R.camera_rays(R.pose_spherical(30.0, -25.0, 4.0), 8, 8, 7.2)
+    o = np.asarray(ro, np.float32).reshape(-1, 3)
+    d = np.asarray(rd, np.float32).reshape(-1, 3)
+    rgb, cost = pp.dispatch_tile(o.copy(), d.copy())
+    assert cost == {"layers": 0, "bytes": 0}
+    np.testing.assert_array_equal(np.asarray(rgb),
+                                  np.asarray(pp.render_tile(o, d)))
+
+
+def test_routed_engine_reduces_gather_accounting(setup):
+    """route_by_shard over sharded residents (replicated fallback on this
+    1-device box: the home cell owns all layers): routed accounting drops
+    to zero, unrouted prices every dispatch, pixels identical."""
+    cfg, param_sets = setup
+    mesh = rsh.plcore_mesh()
+
+    def make(routed):
+        cache = SceneCache(
+            lambda sid: PackedPlcore(cfg, param_sets[sid], shard_mesh=mesh),
+            capacity_mb=256.0)
+        return RenderEngine(cache, tile_rays=TILE, pipeline_depth=2,
+                            route_by_shard=routed)
+    reqs = MIXED[:3]
+    engines = {}
+    for routed in (True, False):
+        eng = make(routed)
+        rids = [eng.submit(r) for r in reqs]
+        eng.drain()
+        engines[routed] = (eng, rids)
+    routed_eng, routed_rids = engines[True]
+    unrouted_eng, unrouted_rids = engines[False]
+    assert routed_eng.stats["routed_tiles"] == routed_eng.stats["dispatches"]
+    assert routed_eng.stats["plcore_gather_count"] == 0
+    assert unrouted_eng.stats["routed_tiles"] == 0
+    assert (unrouted_eng.stats["plcore_gather_count"]
+            == unrouted_eng.stats["dispatches"] * 2 * 2 * cfg.trunk_layers)
+    assert unrouted_eng.stats["plcore_gather_bytes"] > 0
+    for rr, ur in zip(routed_rids, unrouted_rids):
+        np.testing.assert_array_equal(routed_eng.completed[rr].image,
+                                      unrouted_eng.completed[ur].image)
+
+
+# ------------------------------------------------- 8-device subprocess -----
+_SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+from dataclasses import replace
+import jax
+from repro.configs.nerf_icarus import tiny
+from repro.core.pipeline import PackedPlcore
+from repro.core.plcore import plcore_decls
+from repro.models.params import init_params
+from repro.runtime import sharding as rsh
+from repro.serving import RenderEngine, RenderRequest, SceneCache
+
+cfg = tiny()
+L = cfg.trunk_layers
+mesh = rsh.plcore_mesh(4)                       # 4-way layer shard (L=4)
+assert rsh.plcore_shard_count(mesh, L) == 4
+table = rsh.plcore_owner_table(mesh, L).astype(int)
+assert table.shape == (4, L) and (table.sum(1) == L // 4).all()
+assert (table.sum(0) == 1).all()                # every layer has ONE owner
+homes = {s: rsh.plcore_home_cell(mesh, L, s)
+         for s in ("s0", "s1", "s2")}
+assert len(set(homes.values())) > 1, homes      # scenes spread over cells
+
+param_sets = {f"s{i}": init_params(plcore_decls(cfg), jax.random.PRNGKey(i),
+                                   "float32") for i in range(3)}
+def make(routed, depth):
+    cache = SceneCache(
+        lambda sid: PackedPlcore(cfg, param_sets[sid], shard_mesh=mesh),
+        capacity_mb=256.0)
+    return RenderEngine(cache, tile_rays=128, pipeline_depth=depth,
+                        route_by_shard=routed)
+
+reqs = [RenderRequest("s0", hw=12), RenderRequest("s1", hw=16),
+        RenderRequest("s0", hw=16), RenderRequest("s2", hw=12)]
+runs = {}
+for name, routed, depth in (("sync", False, 1), ("routed", True, 2),
+                            ("unrouted", False, 2)):
+    eng = make(routed, depth)
+    rids = [eng.submit(r) for r in reqs]
+    eng.drain()
+    assert eng.in_flight_tiles == 0
+    runs[name] = (eng, [eng.completed[rid].image for rid in rids])
+
+# pipelined + routed framebuffers == synchronous unrouted, bit for bit
+for name in ("routed", "unrouted"):
+    for a, b in zip(runs["sync"][1], runs[name][1]):
+        assert np.array_equal(a, b), f"{name} images != synchronous"
+        assert np.isfinite(a).all()
+
+# real-shard accounting: unrouted pays all L layers per stacked array,
+# routing a home cell that owns L/4 of them strictly reduces the count
+eng_r, eng_u = runs["routed"][0], runs["unrouted"][0]
+d = eng_u.stats["dispatches"]
+assert eng_u.stats["plcore_gather_count"] == d * 2 * 2 * L
+assert eng_r.stats["dispatches"] == d
+assert eng_r.stats["plcore_gather_count"] == d * 2 * 2 * (L - L // 4)
+assert eng_r.stats["plcore_gather_bytes"] < eng_u.stats["plcore_gather_bytes"]
+assert eng_r.stats["max_in_flight"] == 2
+print("ALL OK")
+"""
+
+
+@pytest.mark.slow
+def test_routed_pipelined_engine_multidevice():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", _SNIPPET], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ALL OK" in out.stdout
