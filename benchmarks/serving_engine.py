@@ -25,6 +25,16 @@ Two more interleaved passes cover the scheduler/executor split:
   ``_bytes``) — the cross-device weight-traffic quantity routing
   shrinks.
 
+A fourth pass covers the fault-tolerance layer:
+
+* ``robustness``: the SAME trace under the canonical seeded chaos plan
+  (``FaultConfig.chaos(seed=0)`` — injected dispatch errors, corrupted
+  tiles, loader failures, stragglers) through a COLD chaos-wrapped
+  cache: goodput (delivered / submitted), per-status terminal counts,
+  and the recovery-ladder counters (retries, oracle fallbacks,
+  redispatches). Deterministic in the seed, so the persisted history
+  shows the recovery surface shifting across PRs, not noise.
+
 ``benchmarks/run.py serving`` lands the result in ``BENCH_plcore.json``'s
 append-only history next to the kernel variants, so the serving-layer
 trajectory is tracked across PRs like the kernel one. BENCH_SERVING_*
@@ -44,7 +54,7 @@ from repro.core.pipeline import PackedPlcore
 from repro.core.plcore import plcore_decls
 from repro.models.params import init_params
 from repro.runtime import sharding as rsh
-from repro.serving import RenderEngine, SceneCache
+from repro.serving import FaultConfig, FaultPlan, RenderEngine, SceneCache
 from repro.serving import loadgen
 from repro.serving.scene_cache import plcore_nbytes
 
@@ -137,6 +147,18 @@ def run() -> dict:
     rep_sh_rt = min(reps_sh_rt, key=lambda r: r["wall_s"])
     seq_wall = min(seq_walls)
 
+    # robustness pass: same trace, canonical chaos plan, COLD wrapped
+    # cache (loader faults only fire on misses, so warm-up would hide
+    # them); counters are seed-deterministic — one round suffices
+    plan = FaultPlan(FaultConfig.chaos(seed=0))
+    cache_chaos = SceneCache(
+        plan.wrap_loader(lambda sid: PackedPlcore(cfg, param_sets[sid])),
+        capacity_mb=256.0)
+    engine_chaos = RenderEngine(cache_chaos, tile_rays=tile_rays,
+                                faults=plan)
+    rep_chaos = loadgen.run_trace(engine_chaos, trace, mode="closed",
+                                  concurrency=4)
+
     out = {
         "scenes": n_scenes, "requests": n_requests, "tile_rays": tile_rays,
         "req_per_s": rep["req_per_s"], "rays_per_s": rep["rays_per_s"],
@@ -194,6 +216,14 @@ def run() -> dict:
                 2 * kops.plcore_resident_weight_bytes(cfg, 1)
                 / (1 << 20), 4),
         },
+        # the fault-tolerance surface under the canonical chaos plan:
+        # goodput + status counts + the recovery-ladder accounting
+        # (RenderEngine.robustness schema, see docs/benchmarks.md)
+        "robustness": {
+            "fault_seed": 0,
+            "req_per_s": rep_chaos["req_per_s"],
+            **rep_chaos["robustness"],
+        },
     }
     emit("serving/req_per_s", 0.0, f"req_per_s={out['req_per_s']}")
     emit("serving/pipelined_req_per_s", 0.0,
@@ -211,6 +241,10 @@ def run() -> dict:
          f"_vs_unrouted_{out['sharding']['gather_layers_unrouted']}")
     emit("serving/speedup_vs_sequential", 0.0,
          f"x{out['speedup_engine_vs_sequential']}")
+    rb = out["robustness"]
+    emit("serving/chaos_goodput", 0.0,
+         f"goodput={rb['goodput']}_retries={rb['tile_retries']}"
+         f"_fallbacks={rb['oracle_fallbacks']}")
     return out
 
 

@@ -45,6 +45,17 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     --shard-weights --shard-devices 4 --route-by-shard \
     --pipeline-depth 2 --check
 
+echo "== chaos smoke (seeded fault injection through the engine) =="
+# fixed-seed chaos plan (injected dispatch errors, corrupted tiles,
+# loader failures, stragglers) over the deterministic closed-loop trace;
+# --check fails the run unless every request reached a terminal status,
+# >= 1 fault was actually injected, goodput >= 0.75, and every request
+# that ended ok is BIT-IDENTICAL to a clean (no-fault) rerun — i.e. the
+# retry -> oracle recovery ladder reconstructs exact pixels
+python -m repro.launch.serve --mode engine --scenes 3 --requests 9 \
+    --hw-mix 12,16 --tile-rays 128 --loop closed --seed 0 \
+    --inject-faults --fault-seed 0 --check
+
 echo "== docs link check =="
 python scripts/check_docs_links.py
 

@@ -158,7 +158,8 @@ def _ray_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
 
 
 def _tile_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
-             fuse_two_pass: bool = False, shard_mesh=None):
+             fuse_two_pass: bool = False, shard_mesh=None,
+             coarse_only: bool = False):
     """Tile-stream program: ONE pre-coalesced fixed-shape ray tile ->
     pixel colors. This is the serving-engine entry point — the engine
     coalesces rays from many concurrent requests into a tile, dispatches
@@ -171,18 +172,40 @@ def _tile_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
     Returns rgb ONLY, so nothing but the pixels leaves the program.
     Compiled once per (cfg, flags) and re-specialized per tile shape;
     tile buffers are donated off-CPU (the engine builds fresh ones per
-    dispatch)."""
-    key = (cfg, use_kernel, float(ert_eps), fuse_two_pass, shard_mesh)
+    dispatch).
+
+    ``coarse_only`` is the overload-degradation program (Cicero's
+    controlled quality reduction as an overload response): deterministic
+    coarse sampling + the coarse MLP + VRU only — no importance
+    resample, no fine pass — at roughly ``n_coarse / (2*n_coarse +
+    n_fine)`` of the full sample budget. Per-ray independent like the
+    full body, so degraded coalescing is equally partition-invariant."""
+    key = (cfg, use_kernel, float(ert_eps), fuse_two_pass, shard_mesh,
+           coarse_only)
     fn = _TILE_JITS.get(key)
     if fn is None:
-        def run(params, quant, packed, o_tile, d_tile):
-            params, quant, packed = _materialize(
-                cfg, params, quant, packed, shard_mesh, use_kernel)
-            out = plcore.render_rays(
-                cfg, params, o_tile, d_tile, quant=quant, packed=packed,
-                use_kernel=use_kernel, fuse_two_pass=fuse_two_pass,
-                ert_eps=ert_eps, white_bkgd=True)
-            return out["rgb"]
+        if coarse_only:
+            from repro.core import sampling, volume
+
+            def run(params, quant, packed, o_tile, d_tile):
+                params, quant, packed = _materialize(
+                    cfg, params, quant, packed, shard_mesh, use_kernel)
+                t_c = sampling.stratified(cfg.near, cfg.far, cfg.n_coarse,
+                                          o_tile.shape[:-1], None)
+                rgb_c, aux_c = plcore._eval_pass(
+                    cfg, params["coarse"], (quant or {}).get("coarse"),
+                    o_tile, d_tile, t_c, use_kernel,
+                    (packed or {}).get("coarse"))
+                return volume.white_background(rgb_c, aux_c["acc"])
+        else:
+            def run(params, quant, packed, o_tile, d_tile):
+                params, quant, packed = _materialize(
+                    cfg, params, quant, packed, shard_mesh, use_kernel)
+                out = plcore.render_rays(
+                    cfg, params, o_tile, d_tile, quant=quant, packed=packed,
+                    use_kernel=use_kernel, fuse_two_pass=fuse_two_pass,
+                    ert_eps=ert_eps, white_bkgd=True)
+                return out["rgb"]
 
         fn = _donating_jit(run, ("o_tile", "d_tile"))
         _TILE_JITS[key] = fn
@@ -299,15 +322,36 @@ class PackedPlcore:
             shard_mesh=self.shard_mesh)
 
     def render_tile(self, o_tile, d_tile,
-                    ert_eps: Optional[float] = None) -> jnp.ndarray:
+                    ert_eps: Optional[float] = None,
+                    coarse_only: bool = False) -> jnp.ndarray:
         """Render ONE pre-coalesced ray tile -> rgb (n, 3). The serving
         engine's dispatch path: fixed tile shapes hit the same compiled
         program every call (no per-request retrace), and the tile body is
         identical to ``render_image``'s per-tile body, so scattered
         pixels match the per-request render bit-for-bit. Off-CPU the
-        tile buffers are DONATED — pass fresh arrays per dispatch."""
+        tile buffers are DONATED — pass fresh arrays per dispatch.
+        ``coarse_only=True`` is the overload-degradation program: the
+        coarse pass only, ~1/3 of the sample budget (see ``_tile_fn``)."""
         eps = self.ert_eps if ert_eps is None else float(ert_eps)
         fn = _tile_fn(self.cfg, self.use_kernel, eps, self.fuse_two_pass,
+                      self.shard_mesh, coarse_only)
+        return fn(self.params, self.quant, self.packed, o_tile, d_tile)
+
+    def render_tile_oracle(self, o_tile, d_tile,
+                           ert_eps: Optional[float] = None) -> jnp.ndarray:
+        """The retry ladder's LAST rung: render one tile through the
+        bit-exact oracle program. For a ``fuse_two_pass`` instance that
+        is the two-dispatch kernel path (coarse and fine as separate
+        Pallas dispatches — PR 2's regression oracle, bit-identical to
+        the fused kernel by construction and pinned so in tests); for
+        everything else it is the primary tile program itself, so the
+        call is simply a fresh synchronous dispatch. Either way the
+        pixels equal the healthy primary path's bit-for-bit — recovery
+        through the oracle is invisible in delivered framebuffers. The
+        fault-injection plan never wraps this path: it is the trusted
+        floor the ladder stands on."""
+        eps = self.ert_eps if ert_eps is None else float(ert_eps)
+        fn = _tile_fn(self.cfg, self.use_kernel, eps, False,
                       self.shard_mesh)
         return fn(self.params, self.quant, self.packed, o_tile, d_tile)
 
@@ -341,7 +385,8 @@ class PackedPlcore:
 
     def dispatch_tile(self, o_tile, d_tile, *,
                       home_cell: Optional[int] = None,
-                      ert_eps: Optional[float] = None):
+                      ert_eps: Optional[float] = None,
+                      coarse_only: bool = False):
         """The pipelined executor's entry point: dispatch ONE coalesced
         ray tile and return ``(rgb, gather_cost)`` — ``rgb`` an
         UN-BLOCKED device array (jax async dispatch: the host returns as
@@ -349,6 +394,10 @@ class PackedPlcore:
         tile k+1 and scatter tile k-1 while the device computes tile k;
         materialize with ``np.asarray`` only at a drain point) and
         ``gather_cost`` the ``tile_gather_cost(home_cell)`` record this
-        dispatch is accounted at."""
-        return (self.render_tile(o_tile, d_tile, ert_eps=ert_eps),
+        dispatch is accounted at. ``coarse_only`` selects the
+        overload-degradation program (same gather model — the coarse
+        trunk stack still gathers; the accounting difference is noise
+        next to the 3x sample saving)."""
+        return (self.render_tile(o_tile, d_tile, ert_eps=ert_eps,
+                                 coarse_only=coarse_only),
                 self.tile_gather_cost(home_cell))

@@ -68,6 +68,22 @@ Two services:
   every resident scene's trunk stacks partitioned over the mesh, so
   ``--cache-mb`` (a per-device budget) holds ~n_shards x more scenes.
 
+  Fault tolerance (the robustness surface): ``--deadline-ms`` stamps
+  every trace request with an SLO deadline (arms admission control +
+  expiry), ``--max-queue`` bounds the request queue (admission rejects
+  beyond it), ``--degrade-on-overload`` lets backlog switch low-priority
+  requests to coarse-only rendering (terminal status ``degraded``), and
+  ``--inject-faults`` arms the canonical seeded chaos plan
+  (``FaultConfig.chaos(--fault-seed)``): injected dispatch errors,
+  NaN/Inf-corrupted tiles, loader failures and stragglers, all recovered
+  by the engine's retry -> oracle ladder. The report then carries
+  ``goodput``, per-status counts and the full ``robustness`` block.
+  Under ``--inject-faults``, ``--check`` additionally gates: every
+  request reached a terminal status, at least one fault was actually
+  injected, goodput >= 0.75, and every request that ended ``ok`` has a
+  framebuffer BIT-IDENTICAL to a clean rerun (fresh cache, no faults) of
+  the same trace — recovery reconstructs exact pixels or the gate fails.
+
 * ``--mode lm``: batched LM inference on any assigned arch (smoke config on
   CPU): prefill a prompt batch, decode N tokens with the KV/state cache.
 
@@ -229,7 +245,8 @@ def serve_engine(args) -> dict:
     Poisson request trace through the coalescing RenderEngine."""
     from dataclasses import replace
 
-    from repro.serving import RenderEngine, SceneCache
+    from repro.serving import (FaultConfig, FaultPlan, RenderEngine,
+                               SceneCache)
     from repro.serving import loadgen
 
     cfg = NERF_FULL if args.full else nerf_tiny()
@@ -261,18 +278,34 @@ def serve_engine(args) -> dict:
                             fuse_two_pass=args.fuse_two_pass,
                             shard_mesh=shard_mesh)
 
-    cache = SceneCache(load_scene, capacity_mb=args.cache_mb)
+    plan = (FaultPlan(FaultConfig.chaos(args.fault_seed))
+            if args.inject_faults else None)
+    cache = SceneCache(plan.wrap_loader(load_scene) if plan else load_scene,
+                       capacity_mb=args.cache_mb)
 
-    def make_engine(depth, routed):
-        return RenderEngine(cache, tile_rays=args.tile_rays,
-                            pipeline_depth=depth, route_by_shard=routed)
+    def make_engine(depth, routed, *, chaos=False, use_cache=None):
+        # reference reruns are always CLEAN: no fault plan (reusing the
+        # primary plan would continue its RNG streams, not replay them)
+        # and — when faults are armed — a fresh cache with the unwrapped
+        # loader, so a ref load can't draw an injected loader fault
+        if use_cache is None:
+            use_cache = (SceneCache(load_scene, capacity_mb=args.cache_mb)
+                         if plan is not None and not chaos else cache)
+        return RenderEngine(use_cache, tile_rays=args.tile_rays,
+                            pipeline_depth=depth, route_by_shard=routed,
+                            max_queue=args.max_queue,
+                            degrade_on_overload=args.degrade_on_overload,
+                            faults=plan if chaos else None)
 
-    engine = make_engine(args.pipeline_depth, args.route_by_shard)
+    engine = make_engine(args.pipeline_depth, args.route_by_shard,
+                         chaos=True)
+    deadline_choices = ((None,) if args.deadline_ms is None
+                        else (args.deadline_ms / 1e3,))
     trace = loadgen.poisson_trace(
         args.requests, scene_ids, rate_rps=args.rate,
         hw_choices=tuple(int(h) for h in args.hw_mix.split(",")),
         priorities=tuple(int(p) for p in args.priority_mix.split(",")),
-        seed=args.seed)
+        deadline_choices=deadline_choices, seed=args.seed)
     stats = loadgen.run_trace(engine, trace, mode=args.loop,
                               concurrency=args.concurrency)
     stats = {"scenes": args.scenes, "tile_rays": args.tile_rays,
@@ -280,7 +313,9 @@ def serve_engine(args) -> dict:
              "fuse_two_pass": bool(args.fuse_two_pass),
              "ert_eps": cfg.ert_eps,
              "pipeline_depth": args.pipeline_depth,
-             "route_by_shard": bool(args.route_by_shard), **stats}
+             "route_by_shard": bool(args.route_by_shard),
+             "inject_faults": bool(args.inject_faults),
+             "deadline_ms": args.deadline_ms, **stats}
     if shard_mesh is not None:
         from repro.runtime import sharding as rsh
         stats["shard_devices"] = int(shard_mesh.size)
@@ -308,17 +343,44 @@ def serve_engine(args) -> dict:
         # gates below rerun the trace on a reference engine and compare
         # framebuffers bit-for-bit (rids align: every run submits in
         # trace order; per-ray independence makes images depth- and
-        # routing-invariant even when the tile partition differs)
+        # routing-invariant even when the tile partition differs).
+        # Only requests that ended ``ok`` in BOTH runs are compared —
+        # a degraded/partial/rejected image is policy-dependent, not a
+        # determinism anchor
         def rerun_and_compare(depth, routed, label):
             ref = make_engine(depth, routed)
             loadgen.run_trace(ref, trace, mode=args.loop,
                               concurrency=args.concurrency)
+            n_cmp = 0
             for rid, res in engine.completed.items():
-                if not np.array_equal(res.image, ref.completed[rid].image):
+                if res.status != "ok":
+                    continue
+                refres = ref.completed.get(rid)
+                if refres is None or refres.status != "ok":
+                    continue
+                n_cmp += 1
+                if not np.array_equal(res.image, refres.image):
                     raise SystemExit(f"engine check: image for request "
                                      f"{rid} differs from the {label} "
                                      f"reference render")
+            if n_cmp == 0:
+                raise SystemExit(f"engine check: no ok-status requests to "
+                                 f"compare against the {label} reference")
             return ref
+
+        if args.inject_faults:
+            rb = stats["robustness"]
+            if rb["faults_injected"]["total_injected"] < 1:
+                raise SystemExit("engine check: --inject-faults armed but "
+                                 "the plan injected nothing — the chaos "
+                                 "smoke exercised no recovery path")
+            if rb["goodput"] is None or rb["goodput"] < 0.75:
+                raise SystemExit(f"engine check: chaos goodput "
+                                 f"{rb['goodput']} < 0.75")
+            # recovery must reconstruct exact pixels: every request that
+            # ended ok under faults is bit-identical to a clean rerun
+            rerun_and_compare(args.pipeline_depth, args.route_by_shard,
+                              "clean (no-fault)")
 
         # the occupancy and gather-count gates compare counters across
         # runs, which is only deterministic in the clockless closed loop
@@ -465,10 +527,33 @@ def build_parser():
                     help="comma list of request resolutions")
     ap.add_argument("--priority-mix", default="0",
                     help="comma list of request priorities (higher wins)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request SLO deadline (ms from submit): arms "
+                         "admission control (reject when predicted "
+                         "queueing delay exceeds it) and expiry "
+                         "(partial/expired terminal statuses)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the engine request queue; submissions "
+                         "beyond it are terminally rejected at admission")
+    ap.add_argument("--degrade-on-overload", action="store_true",
+                    help="under backlog, switch low-priority requests to "
+                         "coarse-only rendering (terminal status "
+                         "'degraded', flagged in stats) instead of "
+                         "queueing them at full quality")
+    ap.add_argument("--inject-faults", action="store_true",
+                    help="arm the canonical seeded chaos plan "
+                         "(FaultConfig.chaos): injected dispatch errors, "
+                         "corrupted tiles, loader failures, stragglers — "
+                         "exercises the retry -> oracle recovery ladder")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the --inject-faults chaos plan")
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero unless all requests completed, "
                          "cache hit rate > 0, and coalescing saved "
-                         "dispatches (the CI smoke gate)")
+                         "dispatches (the CI smoke gate); with "
+                         "--inject-faults additionally gates goodput >= "
+                         "0.75, >= 1 injected fault, and ok-status "
+                         "bit-identity vs a clean rerun")
     # lm
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--batch", type=int, default=4)

@@ -22,11 +22,21 @@ dataflow):
                      arrivals, mixed resolutions) reporting throughput
                      and tail latency, split into queueing delay vs
                      service time.
+* ``faults``       — deterministic seeded fault injection (dispatch
+                     errors, corrupted tiles, loader failures,
+                     stragglers) exercising the engine's recovery
+                     ladder: retry -> oracle fallback, loader backoff,
+                     straggler redispatch, SLO admission + expiry.
 """
-from repro.serving.engine import (CompletionSink, RenderEngine,
+from repro.serving.engine import (STATUSES, CompletionSink, RenderEngine,
                                   RenderRequest, RenderResult,
                                   TileExecutor, TileScheduler)
-from repro.serving.scene_cache import SceneCache
+from repro.serving.faults import (FaultConfig, FaultPlan,
+                                  InjectedDispatchError,
+                                  InjectedLoaderError)
+from repro.serving.scene_cache import SceneCache, SceneLoadError
 
 __all__ = ["RenderEngine", "RenderRequest", "RenderResult", "SceneCache",
-           "TileScheduler", "TileExecutor", "CompletionSink"]
+           "SceneLoadError", "TileScheduler", "TileExecutor",
+           "CompletionSink", "FaultConfig", "FaultPlan",
+           "InjectedDispatchError", "InjectedLoaderError", "STATUSES"]

@@ -41,32 +41,75 @@ tile partition differs — only throughput and the traffic accounting
 move. Mesh-sharded weight residency still plugs in underneath via the
 ``SceneCache`` loader; routing only adds a scheduler-side placement
 decision on top of it.
+
+Fault tolerance
+---------------
+
+One loader exception, one NaN-poisoned tile, or one straggling dispatch
+must not crash or corrupt the other in-flight requests: ``step()`` and
+``drain()`` never raise for those fault classes. Every submitted request
+instead reaches exactly ONE terminal status:
+
+* ``ok``       — every pixel delivered at full quality.
+* ``degraded`` — completed coarse-only under the overload-degradation
+  policy (Cicero: controlled quality reduction is a legitimate overload
+  response) — ~1/3 of the sample budget, flagged, never silent.
+* ``partial``  — deadline expired mid-render; delivered with the pixels
+  that landed (unrendered pixels stay NaN — visible, not fabricated).
+* ``expired``  — deadline expired before the first ray was tiled.
+* ``rejected`` — refused terminally: at admission (bounded queue full,
+  or SLO admission control predicts the queueing delay alone exceeds
+  the request's deadline) or because its scene's loader failed
+  ``max_load_failures`` consecutive times.
+
+Recovery ladder for a failed tile (dispatch raised, or the drained
+buffer is non-finite): up to ``max_tile_retries`` fresh dispatches with
+capped exponential backoff — a retry re-renders the same rays through
+the same resident weights, so recovery is BIT-EXACT — then the
+two-dispatch oracle program (``PackedPlcore.render_tile_oracle``, the
+trusted bit-identical floor). A ``StragglerMonitor``
+(``runtime.straggler``) watches per-tile in-flight latency; a tile
+whose latency blows past the deadline factor is abandoned and
+redispatched rather than stalling the drain point. Scene-loader
+failures are contained by the ``SceneCache``'s negative-result backoff
+(the scheduler simply schedules other scenes meanwhile). All of it is
+deterministically exercisable via ``serving.faults.FaultPlan``
+(seeded injection at each trust boundary), which CI runs as a chaos
+smoke: goodput gated, fault-free-request pixels bit-identical to a
+clean run.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.data import rays as R
-from repro.serving.scene_cache import SceneCache
+from repro.serving.faults import FaultPlan, InjectedDispatchError
+from repro.serving.scene_cache import SceneCache, SceneLoadError
+
+#: Terminal request statuses (see module docstring).
+STATUSES = ("ok", "degraded", "partial", "expired", "rejected")
 
 
 @dataclass(frozen=True)
 class RenderRequest:
     """One render-an-image request. The camera is a spherical orbit pose
     (the repo's scene convention); ``priority`` is higher-wins, ties
-    FIFO."""
+    FIFO. ``deadline_s`` (relative to submit) arms SLO admission control
+    and expiry: ``None`` never expires — the pre-fault-tolerance
+    behavior."""
     scene_id: str
     hw: int = 64
     theta: float = 45.0
     phi: float = -25.0
     radius: float = 4.0
     priority: int = 0
+    deadline_s: Optional[float] = None
 
 
 @dataclass
@@ -79,6 +122,10 @@ class RenderResult:
     service_start_s: float       # first ray handed to a tile
     complete_s: float
     dispatch_baseline: int       # tiles a request-at-a-time server pays
+    status: str = "ok"           # terminal status (STATUSES)
+    error: Optional[str] = None  # human-readable failure reason
+    retries: int = 0             # tile retry attempts touching this request
+    fallbacks: int = 0           # oracle-fallback tiles touching it
 
     @property
     def latency_s(self) -> float:
@@ -95,12 +142,20 @@ class RenderResult:
         """First-ray-dispatched -> last-pixel-scattered."""
         return self.complete_s - self.service_start_s
 
+    @property
+    def delivered(self) -> bool:
+        """Whether the image carries fully-rendered pixels (``ok`` /
+        ``degraded``) — the goodput numerator."""
+        return self.status in ("ok", "degraded")
+
 
 class _Active:
     """Queue entry: request + flattened rays + framebuffer + cursors."""
     __slots__ = ("req", "rid", "seq", "rays_o", "rays_d", "fb",
                  "next_ray", "n_done", "n_rays", "submit_s",
-                 "service_start_s")
+                 "service_start_s", "deadline_abs", "terminal",
+                 "degraded", "retries", "fallbacks",
+                 "dispatches_at_submit")
 
     def __init__(self, req: RenderRequest, rid: int, seq: int, now: float):
         self.req, self.rid, self.seq, self.submit_s = req, rid, seq, now
@@ -115,6 +170,13 @@ class _Active:
         self.next_ray = 0            # rays handed to tiles so far
         self.n_done = 0              # rays scattered back so far
         self.service_start_s = None  # set when the first ray is tiled
+        self.deadline_abs = (None if req.deadline_s is None
+                             else now + req.deadline_s)
+        self.terminal = False        # a terminal RenderResult exists
+        self.degraded = False        # overload policy: coarse-only tiles
+        self.retries = 0
+        self.fallbacks = 0
+        self.dispatches_at_submit = 0   # priority-aging anchor
 
     @property
     def remaining(self) -> int:
@@ -133,17 +195,28 @@ class _Tile:
     rays_d: np.ndarray
     n_real: int                             # non-pad rays
     home_cell: Optional[int] = None         # shard-locality routing
+    degraded: bool = False                  # coarse-only program
 
 
 # ---------------------------------------------------------------------------
 class TileScheduler:
-    """Layer 1 — policy. Queue, priority/sticky-scene scene pick, tile
-    coalescing, and shard-locality routing. Produces ``_Tile``s; never
-    touches the device."""
+    """Layer 1 — policy. Queue, admission control, priority/sticky-scene
+    scene pick (with optional deterministic priority aging), overload
+    degradation marking, deadline expiry, tile coalescing, and
+    shard-locality routing. Produces ``_Tile``s; never touches the
+    device. Scene-loader failures are absorbed here: a scene whose
+    ``SceneCache.get`` raises is skipped for the current tile (other
+    scenes keep rendering) and its queued requests are terminated once
+    the cache reports ``max_load_failures`` consecutive real failures."""
 
     def __init__(self, cache: SceneCache, *, tile_rays: int,
                  max_sticky_tiles: int, route_by_shard: bool,
-                 stats: dict, clock):
+                 stats: dict, clock, max_queue: Optional[int] = None,
+                 aging_tiles: Optional[int] = None,
+                 degrade_on_overload: bool = False,
+                 degrade_queue_tiles: int = 8,
+                 degrade_max_priority: int = 0,
+                 max_load_failures: int = 3):
         self.cache = cache
         self.tile_rays = int(tile_rays)
         # stickiness bound: after this many consecutive tiles for one
@@ -154,29 +227,95 @@ class TileScheduler:
         self.route_by_shard = bool(route_by_shard)
         self.stats = stats
         self._clock = clock
+        self.max_queue = max_queue
+        self.aging_tiles = aging_tiles
+        self.degrade_on_overload = bool(degrade_on_overload)
+        self.degrade_queue_tiles = int(degrade_queue_tiles)
+        self.degrade_max_priority = int(degrade_max_priority)
+        self.max_load_failures = int(max_load_failures)
         self.queue: List[_Active] = []
         self._seq = 0
         self._current_scene: Optional[str] = None
         self._sticky_run = 0         # consecutive tiles for current scene
         self._home_cells: Dict[str, int] = {}   # scene -> routed cell
+        self._deadlines_armed = False
+        self.completion: Optional["CompletionSink"] = None   # wired by engine
+        self.executor: Optional["TileExecutor"] = None       # wired by engine
+
+    # ------------------------------------------------------- admission ----
+    def _estimated_queueing_s(self) -> Optional[float]:
+        """Predicted wait until a NEW request's first ray is tiled: the
+        backlog ahead of it (queued tiles + in-flight slots) times the
+        observed per-tile service EWMA. ``None`` until the executor has
+        drained at least one tile (cold engines admit optimistically)."""
+        ewma = self.stats.get("tile_service_s_ewma")
+        if not ewma:
+            return None
+        backlog = -(-sum(a.remaining for a in self.queue) // self.tile_rays)
+        in_flight = self.executor.in_flight if self.executor else 0
+        return (backlog + in_flight) * ewma
 
     def submit(self, req: RenderRequest) -> int:
-        """Enqueue a request; returns its request id."""
+        """Enqueue a request; returns its request id. A request refused
+        by admission control still gets an id — its terminal
+        ``rejected`` result is recorded immediately, so every submit is
+        answered exactly once."""
         if req.hw < 1:
             raise ValueError(f"request resolution must be >= 1, got "
                              f"hw={req.hw}")
         rid = self._seq
         self._seq += 1
-        self.queue.append(_Active(req, rid, rid, self._clock()))
-        self.stats["dispatch_baseline"] += -(-self.queue[-1].n_rays
-                                             // self.tile_rays)
+        a = _Active(req, rid, rid, self._clock())
+        a.dispatches_at_submit = self.stats["dispatches"]
+        if req.deadline_s is not None:
+            self._deadlines_armed = True
+        reason = None
+        if (self.max_queue is not None
+                and len(self.queue) >= self.max_queue):
+            reason = (f"queue full ({len(self.queue)} >= "
+                      f"max_queue={self.max_queue})")
+        elif req.deadline_s is not None:
+            est = self._estimated_queueing_s()
+            if est is not None and est > req.deadline_s:
+                reason = (f"admission control: predicted queueing delay "
+                          f"{est:.4f}s exceeds deadline {req.deadline_s}s")
+        if reason is not None:
+            self.completion.terminate(a, "rejected", error=reason)
+            return rid
+        self.queue.append(a)
+        self.stats["dispatch_baseline"] += -(-a.n_rays // self.tile_rays)
         return rid
 
     def remove(self, a: _Active) -> None:
         self.queue.remove(a)
 
+    def expire(self, now: float) -> None:
+        """Terminate overdue requests: ``partial`` if any pixels landed,
+        ``expired`` otherwise. In-flight tiles referencing a terminated
+        request scatter harmlessly into the void (``late_rays``)."""
+        if not self._deadlines_armed:
+            return
+        for a in [a for a in self.queue
+                  if a.deadline_abs is not None and now >= a.deadline_abs]:
+            self.completion.terminate(
+                a, "partial" if a.n_done > 0 else "expired",
+                error=f"deadline {a.req.deadline_s}s exceeded")
+
+    # ----------------------------------------------------------- policy ----
+    def _eff_priority(self, a: _Active) -> int:
+        """Priority with deterministic aging: every ``aging_tiles``
+        engine dispatches a request has waited, its effective priority
+        rises by one — a low-priority request can be bypassed only
+        boundedly often, so overload can't starve it forever. Counted in
+        dispatches (not seconds) so closed-loop scheduling decisions
+        stay clockless-deterministic."""
+        if not self.aging_tiles:
+            return a.req.priority
+        waited = self.stats["dispatches"] - a.dispatches_at_submit
+        return a.req.priority + waited // self.aging_tiles
+
     def _rank(self, a: _Active):
-        return (-a.req.priority, a.seq)
+        return (-self._eff_priority(a), a.seq)
 
     def _schedulable(self) -> List[_Active]:
         """Requests that still have rays to hand out. Entries whose rays
@@ -196,11 +335,30 @@ class TileScheduler:
         best = min(cands, key=self._rank)
         if (self._current_scene is not None
                 and self._sticky_run < self.max_sticky_tiles):
-            mine = [a.req.priority for a in cands
+            mine = [self._eff_priority(a) for a in cands
                     if a.req.scene_id == self._current_scene]
-            if mine and best.req.priority <= max(mine):
+            if mine and self._eff_priority(best) <= max(mine):
                 return self._current_scene
         return best.req.scene_id
+
+    def _mark_degraded(self, cands: List[_Active]) -> None:
+        """Overload degradation: when the queued backlog exceeds
+        ``degrade_queue_tiles`` tiles, requests at or below
+        ``degrade_max_priority`` that have NOT started rendering are
+        switched to the coarse-only program for their whole image (a
+        request never mixes qualities). Flagged in stats and in the
+        terminal status (``degraded``) — controlled degradation is a
+        policy, not a silent corner cut."""
+        if not self.degrade_on_overload:
+            return
+        backlog = -(-sum(a.remaining for a in cands) // self.tile_rays)
+        if backlog <= self.degrade_queue_tiles:
+            return
+        for a in cands:
+            if (not a.degraded and a.service_start_s is None
+                    and self._eff_priority(a) <= self.degrade_max_priority):
+                a.degraded = True
+                self.stats["degraded_requests"] += 1
 
     def _route(self, scene_id: str, pp) -> Optional[int]:
         """Shard-locality routing: the tile's home cell is a mesh device
@@ -219,24 +377,60 @@ class TileScheduler:
             self._home_cells[scene_id] = home
         return home
 
+    def _note_load_failure(self, scene: str, err: SceneLoadError) -> None:
+        """Account one failed ``cache.get`` and, once the cache reports
+        ``max_load_failures`` consecutive REAL loader failures for the
+        scene, declare it dead: terminate every queued request for it
+        (``partial`` if pixels already landed, else ``rejected``) so the
+        serving loop always makes progress past a dead scene."""
+        key = "scene_load_fail_fasts" if err.fail_fast else "scene_load_errors"
+        self.stats[key] += 1
+        if (not err.fail_fast
+                and self.cache.consecutive_failures(scene)
+                >= self.max_load_failures):
+            for a in [a for a in self.queue if a.req.scene_id == scene]:
+                self.completion.terminate(
+                    a, "partial" if a.n_done > 0 else "rejected",
+                    error=f"scene load failed: {err}")
+
     def next_tile(self) -> Optional[_Tile]:
-        """Coalesce ONE tile from the best scene's pending requests in
-        queue order; None when no request has rays left to hand out."""
-        cands = self._schedulable()
-        if not cands:
-            return None
-        scene = self._pick_scene(cands)
+        """Coalesce ONE tile from the best loadable scene's pending
+        requests in queue order; None when no request has rays left to
+        hand out (or every candidate scene's loader is failing — their
+        requests stay queued through the cache's backoff window and are
+        terminated when the scene is declared dead)."""
+        tried = set()
+        while True:
+            cands = [a for a in self._schedulable()
+                     if a.req.scene_id not in tried]
+            if not cands:
+                return None
+            self._mark_degraded(cands)
+            scene = self._pick_scene(cands)
+            try:
+                pp = self.cache.get(scene)
+            except SceneLoadError as e:
+                tried.add(scene)
+                self._note_load_failure(scene, e)
+                continue
+            break
         if scene != self._current_scene:
             self.stats["scene_switches"] += 1
             self._current_scene = scene
             self._sticky_run = 0
         self._sticky_run += 1
-        pp = self.cache.get(scene)
 
         now = self._clock()
+        scene_cands = sorted((a for a in cands if a.req.scene_id == scene),
+                             key=self._rank)
+        # a tile is mode-pure: degraded (coarse-only) and full-quality
+        # rays can't share a dispatch program, so coalesce only requests
+        # matching the best-ranked candidate's mode
+        degraded = scene_cands[0].degraded
         spans, chunks_o, chunks_d, n = [], [], [], 0
-        for a in sorted((a for a in cands if a.req.scene_id == scene),
-                        key=self._rank):
+        for a in scene_cands:
+            if a.degraded != degraded:
+                continue
             take = min(a.remaining, self.tile_rays - n)
             if take <= 0:
                 continue
@@ -256,7 +450,7 @@ class TileScheduler:
             self.stats["padded_rays"] += pad
         return _Tile(scene, pp, spans, np.concatenate(chunks_o),
                      np.concatenate(chunks_d), n,
-                     home_cell=self._route(scene, pp))
+                     home_cell=self._route(scene, pp), degraded=degraded)
 
 
 # ---------------------------------------------------------------------------
@@ -266,31 +460,118 @@ class TileExecutor:
     program and returns without blocking; the oldest slot is drained
     (host-synced and handed to completion) only when the ring is full or
     at an explicit flush. ``depth=1`` drains every dispatch immediately —
-    exactly the synchronous loop."""
+    exactly the synchronous loop.
+
+    Failure handling lives at the executor's two trust boundaries. A
+    dispatch that RAISES, or a drained buffer with non-finite real rays
+    (the NaN scatter sentinel means corruption cannot hide), enters the
+    synchronous retry ladder: up to ``max_tile_retries`` fresh dispatches
+    with capped exponential backoff, then the bit-exact oracle program —
+    so a recovered tile's pixels are identical to a healthy one's and
+    ``dispatch``/``drain_one`` never raise for these fault classes. The
+    optional ``StragglerMonitor`` watches per-tile in-flight latency and
+    abandons+redispatches tiles that blow past its deadline factor. A
+    ``FaultPlan`` (chaos testing) injects failures at exactly these
+    boundaries; the ladder and oracle are never wrapped."""
 
     def __init__(self, completion: "CompletionSink", cache: SceneCache,
-                 stats: dict, depth: int = 1):
+                 stats: dict, depth: int = 1, *,
+                 faults: Optional[FaultPlan] = None,
+                 straggler=None, max_tile_retries: int = 2,
+                 retry_backoff_s: float = 0.0,
+                 max_retry_backoff_s: float = 0.05,
+                 check_finite: bool = True, clock=time.perf_counter):
         if depth < 1:
             raise ValueError(f"pipeline depth must be >= 1, got {depth}")
         self.completion = completion
         self.cache = cache
         self.stats = stats
         self.depth = int(depth)
-        self._slots: deque = deque()    # (tile, un-blocked device rgb)
+        self.faults = faults
+        self.straggler = straggler
+        self.max_tile_retries = int(max_tile_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.max_retry_backoff_s = float(max_retry_backoff_s)
+        self.check_finite = bool(check_finite)
+        self._clock = clock
+        self._slots: deque = deque()    # (tile, device rgb, t0, extra_s)
 
     @property
     def in_flight(self) -> int:
         return len(self._slots)
 
-    def dispatch(self, tile: _Tile) -> None:
-        """Issue one tile (non-blocking), pin its scene for the life of
-        the slot, account its gather traffic, then drain down to
-        ``depth - 1`` so at most ``depth`` programs are ever enqueued."""
-        rgb, cost = tile.pp.dispatch_tile(jnp.asarray(tile.rays_o),
-                                          jnp.asarray(tile.rays_d),
-                                          home_cell=tile.home_cell)
-        self.cache.pin(tile.scene_id)
-        self._slots.append((tile, rgb))
+    # ------------------------------------------------------- internals ----
+    def _attempt(self, tile: _Tile, allow_straggle: bool = True):
+        """ONE dispatch attempt through the fault plan. Returns
+        ``(device_rgb, gather_cost, injected_extra_latency_s)``; raises
+        on an (injected or real) dispatch failure."""
+        fault = (self.faults.draw_dispatch(allow_straggle=allow_straggle)
+                 if self.faults is not None else None)
+        if fault is not None and fault["kind"] == "dispatch_error":
+            raise InjectedDispatchError(
+                f"injected dispatch failure (tile scene={tile.scene_id})")
+        rgb, cost = tile.pp.dispatch_tile(
+            jnp.asarray(tile.rays_o), jnp.asarray(tile.rays_d),
+            home_cell=tile.home_cell, coarse_only=tile.degraded)
+        extra = (fault["extra_s"]
+                 if fault is not None and fault["kind"] == "straggle"
+                 else 0.0)
+        return rgb, cost, extra
+
+    def _is_finite(self, arr: np.ndarray, tile: _Tile) -> bool:
+        """Real (non-pad) rays must be finite. Checked whenever
+        ``check_finite`` is on (the default) or faults are injected;
+        with both off the check — and its cost — disappears."""
+        if not self.check_finite and self.faults is None:
+            return True
+        return bool(np.isfinite(arr[:tile.n_real]).all())
+
+    def _bump_retries(self, tile: _Tile) -> None:
+        for a, _, _ in tile.spans:
+            if not a.terminal:
+                a.retries += 1
+
+    def _resolve_sync(self, tile: _Tile):
+        """The synchronous retry ladder for a tile whose primary
+        dispatch failed or drained corrupt: up to ``max_tile_retries``
+        fresh dispatches (each a new fault-plan event, so transient
+        faults clear; capped exponential backoff between attempts), then
+        the bit-exact oracle program — which the fault plan never
+        touches. Returns ``(finite rgb ndarray, gather_cost)``; retry
+        attempts are accounted per tile and per touched request, the
+        oracle rung as ``oracle_fallbacks``."""
+        st = self.stats
+        for attempt in range(self.max_tile_retries):
+            st["tile_retries"] += 1
+            self._bump_retries(tile)
+            if self.retry_backoff_s > 0.0:
+                time.sleep(min(self.retry_backoff_s * (2 ** attempt),
+                               self.max_retry_backoff_s))
+            try:
+                rgb, cost, _ = self._attempt(tile, allow_straggle=False)
+            except Exception:
+                st["dispatch_errors"] += 1
+                continue
+            arr = np.asarray(rgb)
+            if self.faults is not None:
+                bad = self.faults.corrupt_tile(arr)
+                if bad is not None:
+                    arr = bad
+            if self._is_finite(arr, tile):
+                return arr, cost
+            st["corrupt_tiles"] += 1
+        st["oracle_fallbacks"] += 1
+        for a, _, _ in tile.spans:
+            if not a.terminal:
+                a.fallbacks += 1
+        o = jnp.asarray(tile.rays_o)
+        d = jnp.asarray(tile.rays_d)
+        arr = np.asarray(
+            tile.pp.render_tile(o, d, coarse_only=True) if tile.degraded
+            else tile.pp.render_tile_oracle(o, d))
+        return arr, tile.pp.tile_gather_cost(tile.home_cell)
+
+    def _account(self, tile: _Tile, cost: dict) -> None:
         st = self.stats
         st["dispatches"] += 1
         st["rays_rendered"] += tile.n_real
@@ -298,17 +579,75 @@ class TileExecutor:
         st["plcore_gather_bytes"] += cost["bytes"]
         if tile.home_cell is not None:
             st["routed_tiles"] += 1
-        st["max_in_flight"] = max(st["max_in_flight"], len(self._slots))
+        if tile.degraded:
+            st["degraded_tiles"] += 1
+
+    def _update_service_ewma(self, dt: float) -> None:
+        prev = self.stats.get("tile_service_s_ewma")
+        self.stats["tile_service_s_ewma"] = (
+            dt if not prev else 0.7 * prev + 0.3 * dt)
+
+    # ----------------------------------------------------------- public ----
+    def dispatch(self, tile: _Tile) -> None:
+        """Issue one tile (non-blocking), pin its scene for the life of
+        the slot, account its gather traffic, then drain down to
+        ``depth - 1`` so at most ``depth`` programs are ever enqueued.
+        A dispatch-time failure is resolved SYNCHRONOUSLY through the
+        retry ladder (it never occupies a slot) — this method does not
+        raise for handled fault classes."""
+        self.cache.pin(tile.scene_id)
+        try:
+            rgb, cost, extra = self._attempt(tile)
+        except Exception:
+            self.stats["dispatch_errors"] += 1
+            arr, cost = self._resolve_sync(tile)
+            self._account(tile, cost)
+            self.completion.scatter(tile, arr)
+            self.cache.unpin(tile.scene_id)
+            return
+        self._slots.append((tile, rgb, self._clock(), extra))
+        self._account(tile, cost)
+        self.stats["max_in_flight"] = max(self.stats["max_in_flight"],
+                                          len(self._slots))
         while len(self._slots) >= self.depth:
             self.drain_one()
 
     def drain_one(self) -> bool:
         """Materialize the OLDEST in-flight tile (the only host sync in
-        the loop), scatter it, release its scene pin."""
+        the loop), recover it if it drained corrupt or straggled, scatter
+        it, release its scene pin. Never raises for handled faults."""
         if not self._slots:
             return False
-        tile, rgb = self._slots.popleft()
-        self.completion.scatter(tile, np.asarray(rgb))
+        tile, rgb, t0, extra = self._slots.popleft()
+        arr = np.asarray(rgb)
+        if self.faults is not None:
+            bad = self.faults.corrupt_tile(arr)
+            if bad is not None:
+                arr = bad
+        redispatched = False
+        if self.straggler is not None:
+            # effective in-flight latency includes any injected straggle;
+            # past the monitor's deadline the slow result is abandoned
+            # and the tile redispatched fresh (on a multi-cell deployment
+            # this lands on a different cell; here it models cutting the
+            # loss instead of stalling the drain point)
+            verdict = self.straggler.record_step(
+                self._clock() - t0 + extra)
+            if verdict["deadline_exceeded"]:
+                self.stats["straggler_redispatches"] += 1
+                arr, _ = self._resolve_sync(tile)
+                redispatched = True
+            elif extra > 0.0:
+                time.sleep(extra)     # the monitor missed it: pay the stall
+                self.stats["straggle_wait_s"] += extra
+        elif extra > 0.0:
+            time.sleep(extra)
+            self.stats["straggle_wait_s"] += extra
+        if not redispatched and not self._is_finite(arr, tile):
+            self.stats["corrupt_tiles"] += 1
+            arr, _ = self._resolve_sync(tile)
+        self._update_service_ewma(self._clock() - t0)
+        self.completion.scatter(tile, arr)
         self.cache.unpin(tile.scene_id)
         return True
 
@@ -321,26 +660,39 @@ class TileExecutor:
 class CompletionSink:
     """Layer 3 — output. Scatters drained tiles to per-request
     framebuffers and completes requests out of order as their last ray
-    lands. Unchanged semantics from the synchronous engine."""
+    lands — and owns TERMINATION: every request ends here exactly once,
+    whether it rendered (``ok``/``degraded``), timed out (``partial``/
+    ``expired``) or was refused (``rejected``)."""
 
-    def __init__(self, scheduler: TileScheduler, stats: dict, clock):
+    def __init__(self, scheduler: TileScheduler, stats: dict, clock,
+                 check_finite: bool = True):
         self.scheduler = scheduler
         self.stats = stats
         self._clock = clock
+        self.check_finite = bool(check_finite)
         self.completed: Dict[int, RenderResult] = {}
         self.completion_order: List[int] = []
 
     def scatter(self, tile: _Tile, rgb: np.ndarray) -> None:
         off = 0
         for a, start, take in tile.spans:
+            if a.terminal:
+                # request already reached a terminal status (expired /
+                # rejected mid-flight): its late pixels drop harmlessly
+                self.stats["late_rays"] += take
+                off += take
+                continue
             a.fb[start:start + take] = rgb[off:off + take]
             a.n_done += take
             off += take
             if a.n_done == a.n_rays:
                 self._complete(a)
 
-    def _complete(self, a: _Active) -> None:
-        self.scheduler.remove(a)
+    def _finish(self, a: _Active, status: str,
+                error: Optional[str] = None) -> None:
+        a.terminal = True
+        if a in self.scheduler.queue:
+            self.scheduler.remove(a)
         hw = a.req.hw
         res = RenderResult(
             request_id=a.rid, scene_id=a.req.scene_id,
@@ -349,10 +701,36 @@ class CompletionSink:
             service_start_s=(a.submit_s if a.service_start_s is None
                              else a.service_start_s),
             complete_s=self._clock(),
-            dispatch_baseline=-(-a.n_rays // self.scheduler.tile_rays))
+            dispatch_baseline=-(-a.n_rays // self.scheduler.tile_rays),
+            status=status, error=error, retries=a.retries,
+            fallbacks=a.fallbacks)
         self.completed[a.rid] = res
         self.completion_order.append(a.rid)
         self.stats["requests_completed"] += 1
+        counts = self.stats["status_counts"]
+        counts[status] = counts.get(status, 0) + 1
+
+    def _complete(self, a: _Active) -> None:
+        if self.check_finite and not np.isfinite(a.fb).all():
+            # fully-scattered framebuffer with a non-finite pixel: the
+            # recovery ladder guarantees finite tiles, so this is an
+            # ENGINE INVARIANT violation (scatter gap / leaked sentinel),
+            # not a handled fault class — surface it loudly rather than
+            # ship a poisoned image (disable via check_finite=False)
+            bad = int((~np.isfinite(a.fb)).any(axis=-1).sum())
+            raise RuntimeError(
+                f"delivered framebuffer for request {a.rid} "
+                f"(scene {a.req.scene_id!r}) has {bad} non-finite pixels "
+                f"— NaN scatter sentinel not fully overwritten")
+        self._finish(a, "degraded" if a.degraded else "ok")
+
+    def terminate(self, a: _Active, status: str,
+                  error: Optional[str] = None) -> None:
+        """Force a request to a terminal status (expiry, rejection, dead
+        scene). Idempotent: the first terminal status wins."""
+        if a.terminal:
+            return
+        self._finish(a, status, error)
 
 
 # ---------------------------------------------------------------------------
@@ -366,30 +744,96 @@ class RenderEngine:
     ``pipeline_depth`` bounds the executor's in-flight slots (1 =
     synchronous, bit-identical baseline; >= 2 overlaps host scatter with
     device compute); ``route_by_shard`` turns on owner-map tile routing
-    for mesh-sharded residents."""
+    for mesh-sharded residents.
+
+    Fault-tolerance knobs (all default to the pre-fault behavior):
+    ``max_queue`` bounds the request queue (admission rejects beyond);
+    requests with a ``deadline_s`` get SLO admission control + expiry;
+    ``aging_tiles`` arms deterministic priority aging;
+    ``degrade_on_overload`` arms coarse-only rendering for low-priority
+    requests under backlog; ``max_tile_retries``/``retry_backoff_s``
+    shape the per-tile retry ladder; ``faults`` injects a seeded
+    ``FaultPlan``; ``straggler_mitigation`` wires the
+    ``runtime.straggler`` monitor into the executor (default: on exactly
+    when faults are injected, so clean deterministic runs stay
+    timing-insensitive); ``check_finite`` asserts delivered framebuffers
+    are finite (on by default — a leaked NaN pixel must not ship
+    silently)."""
 
     def __init__(self, cache: SceneCache, *, tile_rays: int = 512,
                  max_sticky_tiles: int = 64, clock=time.perf_counter,
-                 pipeline_depth: int = 1, route_by_shard: bool = False):
+                 pipeline_depth: int = 1, route_by_shard: bool = False,
+                 max_queue: Optional[int] = None,
+                 aging_tiles: Optional[int] = None,
+                 degrade_on_overload: bool = False,
+                 degrade_queue_tiles: int = 8,
+                 degrade_max_priority: int = 0,
+                 max_load_failures: int = 3,
+                 max_tile_retries: int = 2,
+                 retry_backoff_s: float = 0.0,
+                 faults: Optional[FaultPlan] = None,
+                 straggler_mitigation: Optional[bool] = None,
+                 straggler_cfg=None,
+                 check_finite: bool = True):
         self.cache = cache
+        self.faults = faults
+        self._clock = clock
         self.stats = {
             "dispatches": 0,            # tiles actually issued
             "dispatch_baseline": 0,     # sum ceil(n_rays/tile) per request
             "rays_rendered": 0,         # real rays dispatched
             "padded_rays": 0,           # tail-tile filler rays
             "scene_switches": 0,        # resident-weight changes
-            "requests_completed": 0,
+            "requests_completed": 0,    # requests in ANY terminal status
+            "status_counts": {},        # terminal status -> count
             "plcore_gather_count": 0,   # owner-map remote layer fetches
             "plcore_gather_bytes": 0,   # ... and their bytes
             "routed_tiles": 0,          # tiles with a home cell assigned
             "max_in_flight": 0,         # peak executor slot occupancy
+            # ---- fault accounting -----------------------------------
+            "dispatch_errors": 0,       # dispatch attempts that raised
+            "corrupt_tiles": 0,         # drains with non-finite real rays
+            "tile_retries": 0,          # retry-ladder attempts
+            "oracle_fallbacks": 0,      # tiles resolved by the oracle rung
+            "scene_load_errors": 0,     # real loader failures seen
+            "scene_load_fail_fasts": 0, # backoff short-circuits seen
+            "straggler_redispatches": 0,
+            "straggle_wait_s": 0.0,     # injected stalls actually paid
+            "degraded_requests": 0,     # overload-degraded requests
+            "degraded_tiles": 0,        # coarse-only tiles dispatched
+            "late_rays": 0,             # scatters onto terminal requests
+            "tile_service_s_ewma": None,  # admission-control estimator
         }
         self.scheduler = TileScheduler(
             cache, tile_rays=tile_rays, max_sticky_tiles=max_sticky_tiles,
-            route_by_shard=route_by_shard, stats=self.stats, clock=clock)
-        self.completion = CompletionSink(self.scheduler, self.stats, clock)
-        self.executor = TileExecutor(self.completion, cache, self.stats,
-                                     depth=pipeline_depth)
+            route_by_shard=route_by_shard, stats=self.stats, clock=clock,
+            max_queue=max_queue, aging_tiles=aging_tiles,
+            degrade_on_overload=degrade_on_overload,
+            degrade_queue_tiles=degrade_queue_tiles,
+            degrade_max_priority=degrade_max_priority,
+            max_load_failures=max_load_failures)
+        self.completion = CompletionSink(self.scheduler, self.stats, clock,
+                                         check_finite=check_finite)
+        if straggler_mitigation is None:
+            straggler_mitigation = faults is not None
+        monitor = None
+        if straggler_mitigation:
+            from repro.runtime.straggler import (StragglerConfig,
+                                                 StragglerMonitor)
+            monitor = StragglerMonitor(
+                straggler_cfg if straggler_cfg is not None
+                else StragglerConfig(warmup_steps=2, deadline_factor=4.0,
+                                     ewma_alpha=0.2))
+        self.executor = TileExecutor(
+            self.completion, cache, self.stats, depth=pipeline_depth,
+            faults=faults, straggler=monitor,
+            max_tile_retries=max_tile_retries,
+            retry_backoff_s=retry_backoff_s,
+            check_finite=check_finite, clock=clock)
+        # admission control needs the in-flight count; termination needs
+        # the sink — wire the cross-layer references the façade owns
+        self.scheduler.completion = self.completion
+        self.scheduler.executor = self.executor
 
     # ------------------------------------------------------------ queue ----
     @property
@@ -423,17 +867,22 @@ class RenderEngine:
         return self.completion.completion_order
 
     def submit(self, req: RenderRequest) -> int:
-        """Enqueue a request; returns its request id."""
+        """Enqueue a request; returns its request id. Admission control
+        may terminate it immediately (status ``rejected``) — the result
+        is then already in ``completed``."""
         return self.scheduler.submit(req)
 
     # ------------------------------------------------------------- loop ----
     def step(self) -> bool:
-        """One engine iteration: coalesce + dispatch the next tile if any
-        request still has rays to hand out, else drain one in-flight
-        slot. Returns False only when fully idle (no schedulable rays AND
-        nothing in flight). At ``pipeline_depth=1`` each step is exactly
-        the synchronous coalesce -> dispatch -> block -> scatter of the
-        pre-pipelined engine."""
+        """One engine iteration: expire overdue requests, then coalesce
+        + dispatch the next tile if any request still has rays to hand
+        out, else drain one in-flight slot. Returns False only when
+        fully idle (no schedulable rays AND nothing in flight). At
+        ``pipeline_depth=1`` each step is exactly the synchronous
+        coalesce -> dispatch -> block -> scatter of the pre-pipelined
+        engine. Never raises for handled fault classes (dispatch
+        failures, corrupt tiles, loader errors, stragglers)."""
+        self.scheduler.expire(self._clock())
         tile = self.scheduler.next_tile()
         if tile is not None:
             self.executor.dispatch(tile)
@@ -451,10 +900,39 @@ class RenderEngine:
 
     def drain(self, max_steps: Optional[int] = None) -> int:
         """Run until idle — queue empty AND every in-flight slot flushed
-        (or ``max_steps``); returns steps taken."""
+        (or ``max_steps``); returns steps taken. Termination holds under
+        faults: every step either dispatches, drains, or advances a
+        failing scene toward dead-scene termination."""
         steps = 0
         while ((self.scheduler.queue or self.executor.in_flight)
                and (max_steps is None or steps < max_steps)):
             self.step()
             steps += 1
         return steps
+
+    # ------------------------------------------------------- reporting ----
+    def robustness(self) -> dict:
+        """The fault-accounting summary the loadgen/bench/CI chaos paths
+        persist: per-status terminal counts, goodput (delivered ok or
+        degraded / all terminal), the retry/fallback ladder counters,
+        and — when a ``FaultPlan`` is armed — what it injected."""
+        st = self.stats
+        counts = dict(st["status_counts"])
+        n = sum(counts.values())
+        good = counts.get("ok", 0) + counts.get("degraded", 0)
+        out = {
+            "status_counts": counts,
+            "goodput": round(good / n, 4) if n else None,
+            "tile_retries": st["tile_retries"],
+            "oracle_fallbacks": st["oracle_fallbacks"],
+            "corrupt_tiles": st["corrupt_tiles"],
+            "dispatch_errors": st["dispatch_errors"],
+            "scene_load_errors": st["scene_load_errors"],
+            "scene_load_fail_fasts": st["scene_load_fail_fasts"],
+            "straggler_redispatches": st["straggler_redispatches"],
+            "degraded_requests": st["degraded_requests"],
+            "late_rays": st["late_rays"],
+        }
+        if self.faults is not None:
+            out["faults_injected"] = self.faults.summary()
+        return out

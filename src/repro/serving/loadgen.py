@@ -23,16 +23,24 @@ until the last pixel scatters: the engine's own work). Pipelining and
 routing improve service time; an open-loop arrival burst inflates only
 the queueing component — without the split, backlog masks the engine
 win.
+
+Under fault injection / deadlines the report additionally carries the
+robustness surface: ``goodput`` (fraction of submitted requests that
+DELIVERED — terminal status ``ok`` or ``degraded``), per-status terminal
+counts, and the engine's retry/fallback/redispatch accounting
+(``RenderEngine.robustness``). Latency percentiles are computed over
+delivered requests only — a rejected request's ~0ms "latency" is not a
+latency, and folding it in would make overload look fast.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.serving.engine import RenderEngine, RenderRequest
+from repro.serving.engine import RenderEngine, RenderRequest, RenderResult
 
 
 @dataclass(frozen=True)
@@ -45,20 +53,24 @@ def poisson_trace(n_requests: int, scene_ids: Sequence[str],
                   rate_rps: float = 50.0,
                   hw_choices: Sequence[int] = (16, 32),
                   priorities: Sequence[int] = (0,),
+                  deadline_choices: Sequence[Optional[float]] = (None,),
                   seed: int = 0) -> List[TraceItem]:
     """Open-loop arrival trace: Poisson process at ``rate_rps`` over
-    uniformly-drawn scenes, resolutions and priorities. Deterministic in
-    ``seed``."""
+    uniformly-drawn scenes, resolutions, priorities and per-request
+    deadlines (``deadline_choices`` entries are seconds-from-submit, or
+    ``None`` for no SLO — the default). Deterministic in ``seed``."""
     rng = np.random.RandomState(seed)
     items, t = [], 0.0
     for _ in range(n_requests):
         t += float(rng.exponential(1.0 / rate_rps))
+        dl = deadline_choices[int(rng.randint(len(deadline_choices)))]
         items.append(TraceItem(t, RenderRequest(
             scene_id=scene_ids[int(rng.randint(len(scene_ids)))],
             hw=int(hw_choices[int(rng.randint(len(hw_choices)))]),
             theta=float(rng.uniform(0.0, 360.0)),
             phi=float(rng.uniform(-35.0, -15.0)),
-            priority=int(priorities[int(rng.randint(len(priorities)))]))))
+            priority=int(priorities[int(rng.randint(len(priorities)))]),
+            deadline_s=None if dl is None else float(dl))))
     return items
 
 
@@ -76,11 +88,18 @@ def _report(engine: RenderEngine, latencies_s: List[float],
             service_s: List[float] = ()) -> dict:
     st = dict(engine.stats)
     n = st["requests_completed"]
+    rb = engine.robustness()
+    n_delivered = (rb["status_counts"].get("ok", 0)
+                   + rb["status_counts"].get("degraded", 0))
     return {
         "mode": mode,
         "requests_completed": n,
+        "requests_delivered": n_delivered,
+        "goodput": rb["goodput"],
         "wall_s": round(wall_s, 4),
-        "req_per_s": round(n / wall_s, 2) if wall_s > 0 else None,
+        # throughput counts DELIVERED requests — a rejected request took
+        # no engine work and must not inflate req/s
+        "req_per_s": round(n_delivered / wall_s, 2) if wall_s > 0 else None,
         "rays_per_s": round(st["rays_rendered"] / wall_s, 1)
         if wall_s > 0 else None,
         "latency_ms": _percentiles_ms(latencies_s),
@@ -90,9 +109,16 @@ def _report(engine: RenderEngine, latencies_s: List[float],
         "queueing_ms": _percentiles_ms(queueing_s),
         "service_ms": _percentiles_ms(service_s),
         "engine": st,
+        "robustness": rb,
         "dispatch_savings": st["dispatch_baseline"] - st["dispatches"],
         "cache": engine.cache.stats(),
     }
+
+
+def _delivered(results: List[RenderResult]) -> List[RenderResult]:
+    """Latency percentiles cover delivered requests only: rejected /
+    expired requests have no meaningful render latency."""
+    return [r for r in results if r.delivered]
 
 
 def run_open_loop(engine: RenderEngine, trace: List[TraceItem]) -> dict:
@@ -117,6 +143,7 @@ def run_open_loop(engine: RenderEngine, trace: List[TraceItem]) -> dict:
     wall = clock() - t0
     done = [(engine.completed[rid], t_arr)
             for rid, t_arr in arrivals.items() if rid in engine.completed]
+    done = [(res, t_arr) for res, t_arr in done if res.delivered]
     lats = [res.complete_s - t_arr for res, t_arr in done]
     queueing = [max(0.0, res.service_start_s - t_arr) for res, t_arr in done]
     service = [res.service_s for res, _ in done]
@@ -138,8 +165,8 @@ def run_closed_loop(engine: RenderEngine, trace: List[TraceItem],
             i += 1
         engine.step()
     wall = time.perf_counter() - t0
-    done = [engine.completed[rid]
-            for rid in engine.completion_order[done0:]]
+    done = _delivered([engine.completed[rid]
+                       for rid in engine.completion_order[done0:]])
     return _report(engine, [r.latency_s for r in done], wall, "closed",
                    [r.queueing_s for r in done],
                    [r.service_s for r in done])

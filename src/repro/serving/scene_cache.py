@@ -35,6 +35,17 @@ import jax
 from repro.core.pipeline import PackedPlcore
 
 
+class SceneLoadError(RuntimeError):
+    """``SceneCache.get`` failed to produce a resident scene: either the
+    loader raised (``fail_fast=False`` — the original exception is
+    chained) or the scene is in negative-result backoff after a recent
+    failure (``fail_fast=True`` — the loader was NOT invoked)."""
+
+    def __init__(self, msg: str, *, fail_fast: bool = False):
+        super().__init__(msg)
+        self.fail_fast = fail_fast
+
+
 def device_nbytes(a) -> int:
     """Per-device resident bytes of one array: the largest total any
     single device holds. Replicated (or single-device) arrays cost their
@@ -66,18 +77,35 @@ class SceneCache:
     residency pack); ``capacity_mb`` bounds total PER-DEVICE resident
     bytes, so a loader that builds mesh-sharded residents fits
     proportionally more scenes in the same budget. Hits, misses and
-    evictions are counted for the serving stats."""
+    evictions are counted for the serving stats.
+
+    A loader that RAISES must leave the cache exactly as it was: no
+    partially-constructed entry resident, no stale pin refcount, and the
+    failure is counted (``load_failures``). The failed scene then enters
+    attempt-based negative-result backoff: the next ``fail_backoff``
+    ``get`` calls for it raise ``SceneLoadError(fail_fast=True)``
+    WITHOUT invoking the loader (so a dead scene can't stall the serving
+    loop on repeated load costs), doubling per consecutive failure up to
+    ``max_fail_backoff``; the first post-backoff ``get`` retries the
+    loader for real, and a success clears the failure state."""
 
     def __init__(self, loader: Callable[[str], PackedPlcore],
-                 capacity_mb: float = 256.0):
+                 capacity_mb: float = 256.0, *, fail_backoff: int = 4,
+                 max_fail_backoff: int = 64):
         self._loader = loader
         self.capacity_bytes = int(capacity_mb * (1 << 20))
         self._entries: "OrderedDict[str, Tuple[PackedPlcore, int]]" = \
             OrderedDict()
         self._pins: Dict[str, int] = {}
+        self.fail_backoff = int(fail_backoff)
+        self.max_fail_backoff = int(max_fail_backoff)
+        # scene -> [consecutive real failures, fail-fast credits left]
+        self._failed: Dict[str, list] = {}
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.load_failures = 0      # loader raised
+        self.fail_fasts = 0         # negative-result backoff short-circuits
 
     def __contains__(self, scene_id: str) -> bool:
         return scene_id in self._entries
@@ -123,9 +151,32 @@ class SceneCache:
             self.hits += 1
             self._entries.move_to_end(scene_id)
             return ent[0]
+        fail = self._failed.get(scene_id)
+        if fail is not None and fail[1] > 0:
+            fail[1] -= 1
+            self.fail_fasts += 1
+            raise SceneLoadError(
+                f"scene {scene_id!r} is in load-failure backoff "
+                f"({fail[0]} consecutive failures; retry in {fail[1] + 1} "
+                f"more attempts)", fail_fast=True)
         self.misses += 1
-        pp = self._loader(scene_id)
-        self._entries[scene_id] = (pp, plcore_nbytes(pp))
+        try:
+            pp = self._loader(scene_id)
+            nbytes = plcore_nbytes(pp)
+        except Exception as e:
+            # failure cleanup: nothing was inserted (the entry only lands
+            # below, after the loader AND the size accounting succeed),
+            # so cache state/pins are untouched — count it and arm the
+            # fail-fast window
+            self.load_failures += 1
+            n_fail = (fail[0] if fail else 0) + 1
+            self._failed[scene_id] = [
+                n_fail, min(self.fail_backoff * (2 ** (n_fail - 1)),
+                            self.max_fail_backoff)]
+            raise SceneLoadError(
+                f"loader failed for scene {scene_id!r}: {e}") from e
+        self._failed.pop(scene_id, None)
+        self._entries[scene_id] = (pp, nbytes)
         for victim in list(self._entries):   # LRU -> MRU order
             if (len(self._entries) <= 1
                     or self.resident_bytes <= self.capacity_bytes):
@@ -146,4 +197,14 @@ class SceneCache:
             "pinned_scenes": len(self._pins),
             "resident_mb": round(self.resident_bytes / (1 << 20), 3),
             "capacity_mb": round(self.capacity_bytes / (1 << 20), 3),
+            "load_failures": self.load_failures,
+            "fail_fasts": self.fail_fasts,
+            "failing_scenes": len(self._failed),
         }
+
+    def consecutive_failures(self, scene_id: str) -> int:
+        """Consecutive real loader failures for a scene (0 when healthy).
+        The scheduler uses this to decide when a scene is dead enough to
+        terminate its queued requests."""
+        fail = self._failed.get(scene_id)
+        return fail[0] if fail else 0

@@ -1,0 +1,80 @@
+"""StragglerMonitor unit tests (runtime/straggler.py).
+
+The monitor backs two consumers: the train driver (deadline skip +
+slow-host eviction, DESIGN.md §6) and the serving executor (abandon +
+redispatch a tile whose in-flight latency blows past the deadline
+factor — wired in serving/engine.py). The claims: warmup suppresses
+verdicts entirely; post-warmup, a step past ``deadline_factor x ewma``
+is flagged; a host persistently slower than ``slow_factor x median``
+is evicted only after ``evict_after`` CONSECUTIVE slow steps (one fast
+step resets the streak); ``summary()`` carries the event log.
+"""
+import pytest
+
+from repro.runtime.straggler import (HostStats, StragglerConfig,
+                                     StragglerMonitor, _median)
+
+
+def test_warmup_suppresses_all_verdicts():
+    m = StragglerMonitor(StragglerConfig(warmup_steps=5,
+                                         deadline_factor=2.0))
+    for _ in range(5):
+        v = m.record_step(100.0)              # absurdly slow, still warm
+        assert not v["deadline_exceeded"]
+        assert not v["slow_hosts"] and not v["evict_hosts"]
+    assert m.summary()["events"] == []
+
+
+def test_deadline_detection_post_warmup():
+    m = StragglerMonitor(StragglerConfig(warmup_steps=1,
+                                         deadline_factor=3.0,
+                                         ewma_alpha=0.1))
+    m.record_step(1.0)                        # warm step seeds the ewma
+    v = m.record_step(1.1)
+    assert not v["deadline_exceeded"]
+    assert v["deadline_s"] == pytest.approx(3.0 * m.global_ewma)
+    v = m.record_step(50.0)
+    assert v["deadline_exceeded"]
+    assert ("deadline", 3, 50.0) in m.summary()["events"]
+
+
+def test_ewma_frozen_during_warmup():
+    m = StragglerMonitor(StragglerConfig(warmup_steps=3, ewma_alpha=0.5))
+    m.record_step(1.0)
+    m.record_step(99.0)                       # warm: must not move ewma
+    assert m.global_ewma == 1.0
+
+
+def test_slow_host_evicted_after_streak():
+    m = StragglerMonitor(StragglerConfig(warmup_steps=0, slow_factor=1.5,
+                                         evict_after=3))
+    for i in range(3):
+        v = m.record_step(1.0, per_host={0: 1.0, 1: 1.0, 2: 5.0})
+        assert v["slow_hosts"] == [2]
+        assert v["evict_hosts"] == ([2] if i == 2 else [])
+    assert ("evict", 3, 2) in m.summary()["events"]
+
+
+def test_one_fast_step_resets_slow_streak():
+    m = StragglerMonitor(StragglerConfig(warmup_steps=0, slow_factor=1.5,
+                                         evict_after=3))
+    m.record_step(1.0, per_host={0: 1.0, 1: 1.0, 2: 5.0})
+    m.record_step(1.0, per_host={0: 1.0, 1: 1.0, 2: 5.0})
+    m.record_step(1.0, per_host={0: 1.0, 1: 1.0, 2: 1.0})   # recovered
+    v = m.record_step(1.0, per_host={0: 1.0, 1: 1.0, 2: 5.0})
+    assert v["evict_hosts"] == []             # streak restarted at 1
+    assert m.hosts[2].slow_streak == 1
+
+
+def test_summary_shape():
+    m = StragglerMonitor(StragglerConfig(warmup_steps=0))
+    m.record_step(2.0, per_host={7: 2.0})
+    s = m.summary()
+    assert s["steps"] == 1
+    assert s["ewma_s"] == 2.0
+    assert s["hosts"][7] == vars(HostStats(ewma=2.0, slow_streak=0, n=1))
+
+
+def test_median_odd_and_even():
+    assert _median([3.0, 1.0, 2.0]) == 2.0
+    assert _median([4.0, 1.0, 2.0, 3.0]) == 2.5
