@@ -35,6 +35,15 @@ A fourth pass covers the fault-tolerance layer:
   redispatches). Deterministic in the seed, so the persisted history
   shows the recovery surface shifting across PRs, not noise.
 
+A fifth pass covers the multi-host fabric:
+
+* ``multihost``: the SAME trace through a 2-host ``ClusterEngine``
+  (per-host SceneCache + TileExecutor behind the global scheduler) with
+  one host KILLED at a fixed global dispatch count mid-trace — per-host
+  req/s and dispatch counts, cross-host redispatches, re-queued tiles,
+  and the requeue -> redispatch failover latency. Clockless kill
+  trigger, so the persisted counters are deterministic.
+
 ``benchmarks/run.py serving`` lands the result in ``BENCH_plcore.json``'s
 append-only history next to the kernel variants, so the serving-layer
 trajectory is tracked across PRs like the kernel one. BENCH_SERVING_*
@@ -56,6 +65,7 @@ from repro.models.params import init_params
 from repro.runtime import sharding as rsh
 from repro.serving import FaultConfig, FaultPlan, RenderEngine, SceneCache
 from repro.serving import loadgen
+from repro.serving.cluster import ClusterEngine, HostEvent, split_devices
 from repro.serving.scene_cache import plcore_nbytes
 
 
@@ -159,6 +169,40 @@ def run() -> dict:
     rep_chaos = loadgen.run_trace(engine_chaos, trace, mode="closed",
                                   concurrency=4)
 
+    # multihost pass: same trace through a 2-host cluster (per-host cold
+    # caches over split device groups), then the BUSY host killed at
+    # half its dispatch count on a fresh cluster — residency affinity
+    # concentrates a small trace on one host, so the probe run finds the
+    # host whose death actually forces cross-host failover. at_dispatch
+    # triggers keep the counters seed-deterministic.
+    n_hosts = 2
+    mh_groups = split_devices(n_hosts)
+
+    def _mh_engine():
+        caches_mh = [SceneCache(lambda sid: PackedPlcore(cfg, param_sets[sid]),
+                                capacity_mb=256.0) for _ in range(n_hosts)]
+        return ClusterEngine(caches_mh, device_groups=mh_groups,
+                             tile_rays=tile_rays, pipeline_depth=depth)
+    probe = _mh_engine()
+    disp_hosts = []
+    probe_dispatch = probe._dispatch_on
+    def _record(host, tile, now):
+        probe_dispatch(host, tile, now)
+        disp_hosts.append(host.id)
+    probe._dispatch_on = _record
+    loadgen.run_trace(probe, trace, mode="closed", concurrency=4)
+    busy = max(probe.pool, key=lambda h: h.dispatches)
+    # kill MID-BATCH for the victim: the event fires at the step after
+    # global dispatches reach kill_at, so aiming one past the middle of
+    # the victim's own dispatch sequence guarantees it holds in-flight
+    # slots when it dies (an idle victim's death forces no failover)
+    busy_idx = [i for i, hid in enumerate(disp_hosts) if hid == busy.id]
+    kill_at = busy_idx[len(busy_idx) // 2] + 1
+    engine_mh = _mh_engine()
+    rep_mh = loadgen.run_trace(
+        engine_mh, trace, mode="closed", concurrency=4,
+        host_events=[HostEvent("kill", busy.id, at_dispatch=kill_at)])
+
     out = {
         "scenes": n_scenes, "requests": n_requests, "tile_rays": tile_rays,
         "req_per_s": rep["req_per_s"], "rays_per_s": rep["rays_per_s"],
@@ -224,6 +268,41 @@ def run() -> dict:
             "req_per_s": rep_chaos["req_per_s"],
             **rep_chaos["robustness"],
         },
+        # the multi-host fabric under a mid-trace host kill: per-host
+        # req/s shares + the failover accounting (serving.multihost
+        # schema, see docs/benchmarks.md)
+        "multihost": {
+            "hosts": n_hosts,
+            "devices_per_host": [len(g) if g else None for g in mh_groups],
+            "killed_host": busy.id,
+            "kill_at_dispatch": kill_at,
+            "req_per_s": rep_mh["req_per_s"],
+            "goodput": rep_mh["goodput"],
+            "latency_ms": rep_mh["latency_ms"],
+            # per-host share of the trace: dispatch counts stand in for
+            # per-host req/s (requests complete globally, tiles don't) —
+            # req_per_s_per_host prices each host's slice of the wall
+            "host_dispatches": {
+                hid: h["dispatches"]
+                for hid, h in rep_mh["cluster"]["hosts"].items()},
+            "host_states": {
+                hid: h["state"]
+                for hid, h in rep_mh["cluster"]["hosts"].items()},
+            "req_per_s_per_host": {
+                hid: (round(rep_mh["req_per_s"] * h["dispatches"]
+                            / max(1, rep_mh["engine"]["dispatches"]), 2)
+                      if rep_mh["req_per_s"] is not None else None)
+                for hid, h in rep_mh["cluster"]["hosts"].items()},
+            "host_kills": rep_mh["cluster"]["host_kills"],
+            "requeued_tiles": rep_mh["cluster"]["requeued_tiles"],
+            "cross_host_redispatches":
+                rep_mh["cluster"]["cross_host_redispatches"],
+            "failovers": rep_mh["cluster"]["failovers"],
+            "mean_failover_latency_ms": (
+                round(rep_mh["cluster"]["mean_failover_latency_s"] * 1e3, 3)
+                if rep_mh["cluster"]["mean_failover_latency_s"] is not None
+                else None),
+        },
     }
     emit("serving/req_per_s", 0.0, f"req_per_s={out['req_per_s']}")
     emit("serving/pipelined_req_per_s", 0.0,
@@ -245,6 +324,11 @@ def run() -> dict:
     emit("serving/chaos_goodput", 0.0,
          f"goodput={rb['goodput']}_retries={rb['tile_retries']}"
          f"_fallbacks={rb['oracle_fallbacks']}")
+    mh = out["multihost"]
+    emit("serving/multihost_failover", 0.0,
+         f"goodput={mh['goodput']}_kills={mh['host_kills']}"
+         f"_xhost={mh['cross_host_redispatches']}"
+         f"_failover_ms={mh['mean_failover_latency_ms']}")
     return out
 
 

@@ -56,6 +56,20 @@ python -m repro.launch.serve --mode engine --scenes 3 --requests 9 \
     --hw-mix 12,16 --tile-rays 128 --loop closed --seed 0 \
     --inject-faults --fault-seed 0 --check
 
+echo "== 2-host cluster chaos smoke (8 fake devices split 4+4, host kill) =="
+# multi-host fabric: two per-host executors + caches over 4-device
+# sub-meshes behind the global scheduler; host 1 (the residency-affinity
+# winner for this seed) is killed at global dispatch 6 with depth-2
+# pipelining, so in-flight tiles MUST fail over. --check fails the run
+# unless every submit reached exactly one terminal status, goodput
+# >= 0.75, >= 1 host kill fired, >= 1 tile was redispatched cross-host,
+# and every ok request is BIT-IDENTICAL to a clean single-host rerun
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m repro.launch.serve --mode engine --scenes 3 --requests 10 \
+    --hw-mix 12,16 --tile-rays 128 --loop closed --seed 0 \
+    --hosts 2 --shard-weights --shard-devices 4 --host-kill "1:@6" \
+    --pipeline-depth 2 --check
+
 echo "== docs link check =="
 python scripts/check_docs_links.py
 

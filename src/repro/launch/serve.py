@@ -84,6 +84,23 @@ Two services:
   framebuffer BIT-IDENTICAL to a clean rerun (fresh cache, no faults) of
   the same trace — recovery reconstructs exact pixels or the gate fails.
 
+  Multi-host: ``--hosts N`` serves through the ``ClusterEngine`` fabric
+  — N per-host workers (isolated SceneCache + TileExecutor, each over
+  its own sub-mesh when ``--shard-weights`` splits the process devices
+  into per-host groups) behind one global scheduler with heartbeat
+  health states, cross-host tile failover, per-host scene quarantine
+  and aggregate SLO admission. ``--host-kill H:T`` kills host H at
+  trace time T seconds — or, deterministically, at global dispatch
+  count N via ``H:@N`` (the CI form) — and ``--host-slow H:T`` adds
+  per-dispatch latency on H from time T. With host events + ``--check``
+  the gate additionally requires goodput >= 0.75, every ok-status
+  framebuffer bit-identical to a CLEAN SINGLE-HOST rerun of the same
+  trace, and — for ``@N`` kills in the closed loop — at least one tile
+  provably redispatched across hosts (``cross_host_redispatches``).
+  ``--service-prior-ms`` seeds the admission-control service estimate
+  so a cold engine under burst load doesn't admit everything and
+  mass-expire.
+
 * ``--mode lm``: batched LM inference on any assigned arch (smoke config on
   CPU): prefill a prompt batch, decode N tokens with the KV/state cache.
 
@@ -240,13 +257,38 @@ def serve_nerf(args) -> dict:
     return stats
 
 
+def _parse_host_events(args):
+    """``--host-kill H:T`` / ``--host-slow H:T`` specs -> HostEvents.
+    T is seconds from engine start, or ``@N`` for "when the global
+    dispatch counter reaches N" (clockless-deterministic, the CI form)."""
+    from repro.serving import HostEvent
+
+    def parse(spec, kind):
+        host, sep, at = spec.partition(":")
+        if not sep or not at:
+            raise SystemExit(f"--host-{kind}: expected HOST:AT_S or "
+                             f"HOST:@DISPATCHES, got {spec!r}")
+        at_s = at_dispatch = None
+        if at.startswith("@"):
+            at_dispatch = int(at[1:])
+        else:
+            at_s = float(at)
+        return HostEvent(kind, int(host), at_s=at_s,
+                         at_dispatch=at_dispatch,
+                         extra_s=args.host_slow_extra_ms / 1e3)
+
+    return ([parse(s, "kill") for s in args.host_kill]
+            + [parse(s, "slow") for s in args.host_slow])
+
+
 def serve_engine(args) -> dict:
     """Multi-tenant serving: N scenes behind an LRU weight cache, a
-    Poisson request trace through the coalescing RenderEngine."""
+    Poisson request trace through the coalescing RenderEngine — or,
+    with ``--hosts > 1``, through the multi-host ClusterEngine fabric."""
     from dataclasses import replace
 
-    from repro.serving import (FaultConfig, FaultPlan, RenderEngine,
-                               SceneCache)
+    from repro.serving import (ClusterEngine, FaultConfig, FaultPlan,
+                               RenderEngine, SceneCache, split_devices)
     from repro.serving import loadgen
 
     cfg = NERF_FULL if args.full else nerf_tiny()
@@ -259,43 +301,77 @@ def serve_engine(args) -> dict:
     if args.route_by_shard and not args.shard_weights:
         raise SystemExit("--route-by-shard routes tiles by sharded-weight "
                          "ownership; it requires --shard-weights")
+    if args.hosts < 1:
+        raise SystemExit(f"--hosts must be >= 1, got {args.hosts}")
+    host_events = _parse_host_events(args)
+    if host_events and args.hosts < 2:
+        raise SystemExit("--host-kill/--host-slow need --hosts >= 2 "
+                         "(a single-host engine has no pool)")
     shard_mesh = _shard_mesh_from_args(args)
+
+    # per-host sub-meshes: the process's devices split into contiguous
+    # groups (the xla_force_host_platform_device_count CI idiom), each
+    # host's weight residency sharded over its OWN group only
+    device_groups = split_devices(args.hosts)
+    if shard_mesh is not None and args.hosts > 1:
+        from repro.runtime import sharding as rsh
+        host_meshes = [rsh.plcore_mesh(args.shard_devices, devices=g)
+                       for g in device_groups]
+    else:
+        host_meshes = [shard_mesh] * args.hosts
 
     scene_ids = [f"scene{i}" for i in range(args.scenes)]
 
-    def load_scene(scene_id: str) -> PackedPlcore:
-        # one synthetic model per scene id: a distinct param draw stands
-        # in for a distinct trained checkpoint
-        idx = scene_ids.index(scene_id)
-        params = init_params(plcore_decls(cfg),
-                             jax.random.PRNGKey(args.seed + idx), "float32")
-        quant = None
-        if args.rmcm:
-            quant = {"coarse": rmcm.quantize_tree(params["coarse"]),
-                     "fine": rmcm.quantize_tree(params["fine"])}
-        return PackedPlcore(cfg, params, quant=quant,
-                            use_kernel=args.kernel,
-                            fuse_two_pass=args.fuse_two_pass,
-                            shard_mesh=shard_mesh)
+    def make_loader(mesh):
+        def load_scene(scene_id: str) -> PackedPlcore:
+            # one synthetic model per scene id: a distinct param draw
+            # stands in for a distinct trained checkpoint
+            idx = scene_ids.index(scene_id)
+            params = init_params(plcore_decls(cfg),
+                                 jax.random.PRNGKey(args.seed + idx),
+                                 "float32")
+            quant = None
+            if args.rmcm:
+                quant = {"coarse": rmcm.quantize_tree(params["coarse"]),
+                         "fine": rmcm.quantize_tree(params["fine"])}
+            return PackedPlcore(cfg, params, quant=quant,
+                                use_kernel=args.kernel,
+                                fuse_two_pass=args.fuse_two_pass,
+                                shard_mesh=mesh)
+        return load_scene
 
-    plan = (FaultPlan(FaultConfig.chaos(args.fault_seed))
+    load_scene = make_loader(shard_mesh)
+    plan = (FaultPlan(FaultConfig.cluster_chaos(args.fault_seed)
+                      if args.hosts > 1
+                      else FaultConfig.chaos(args.fault_seed))
             if args.inject_faults else None)
-    cache = SceneCache(plan.wrap_loader(load_scene) if plan else load_scene,
-                       capacity_mb=args.cache_mb)
+    prior_s = (None if args.service_prior_ms is None
+               else args.service_prior_ms / 1e3)
 
     def make_engine(depth, routed, *, chaos=False, use_cache=None):
-        # reference reruns are always CLEAN: no fault plan (reusing the
-        # primary plan would continue its RNG streams, not replay them)
-        # and — when faults are armed — a fresh cache with the unwrapped
-        # loader, so a ref load can't draw an injected loader fault
+        # reference reruns are always CLEAN and SINGLE-HOST: no fault
+        # plan (reusing the primary plan would continue its RNG streams,
+        # not replay them), a fresh cache with the unwrapped loader, no
+        # host pool — the bit-identity anchor every multi-host/faulted
+        # run is compared against
+        kw = dict(tile_rays=args.tile_rays, pipeline_depth=depth,
+                  route_by_shard=routed, max_queue=args.max_queue,
+                  degrade_on_overload=args.degrade_on_overload,
+                  faults=plan if chaos else None,
+                  tile_service_prior_s=prior_s)
+        if chaos and args.hosts > 1:
+            caches = [SceneCache(plan.wrap_loader(make_loader(m))
+                                 if plan else make_loader(m),
+                                 capacity_mb=args.cache_mb)
+                      for m in host_meshes]
+            return ClusterEngine(caches, meshes=host_meshes,
+                                 device_groups=device_groups, **kw)
         if use_cache is None:
-            use_cache = (SceneCache(load_scene, capacity_mb=args.cache_mb)
-                         if plan is not None and not chaos else cache)
-        return RenderEngine(use_cache, tile_rays=args.tile_rays,
-                            pipeline_depth=depth, route_by_shard=routed,
-                            max_queue=args.max_queue,
-                            degrade_on_overload=args.degrade_on_overload,
-                            faults=plan if chaos else None)
+            use_cache = SceneCache(
+                plan.wrap_loader(load_scene)
+                if plan is not None and chaos else load_scene,
+                capacity_mb=args.cache_mb)
+        return RenderEngine(use_cache, **kw)
 
     engine = make_engine(args.pipeline_depth, args.route_by_shard,
                          chaos=True)
@@ -307,7 +383,8 @@ def serve_engine(args) -> dict:
         priorities=tuple(int(p) for p in args.priority_mix.split(",")),
         deadline_choices=deadline_choices, seed=args.seed)
     stats = loadgen.run_trace(engine, trace, mode=args.loop,
-                              concurrency=args.concurrency)
+                              concurrency=args.concurrency,
+                              host_events=host_events or None)
     stats = {"scenes": args.scenes, "tile_rays": args.tile_rays,
              "kernel": bool(args.kernel),
              "fuse_two_pass": bool(args.fuse_two_pass),
@@ -315,6 +392,8 @@ def serve_engine(args) -> dict:
              "pipeline_depth": args.pipeline_depth,
              "route_by_shard": bool(args.route_by_shard),
              "inject_faults": bool(args.inject_faults),
+             "hosts": args.hosts,
+             "host_events": [f"{e.kind}:{e.host}" for e in host_events],
              "deadline_ms": args.deadline_ms, **stats}
     if shard_mesh is not None:
         from repro.runtime import sharding as rsh
@@ -381,6 +460,33 @@ def serve_engine(args) -> dict:
             # ended ok under faults is bit-identical to a clean rerun
             rerun_and_compare(args.pipeline_depth, args.route_by_shard,
                               "clean (no-fault)")
+
+        if host_events:
+            # multi-host gates: the run survived its scheduled host
+            # events (goodput), every ok request's pixels are
+            # bit-identical to a CLEAN SINGLE-HOST rerun, and a
+            # dispatch-count kill provably exercised cross-host failover
+            cl = stats["cluster"]
+            rb = stats["robustness"]
+            if rb["goodput"] is None or rb["goodput"] < 0.75:
+                raise SystemExit(f"engine check: goodput {rb['goodput']} "
+                                 f"< 0.75 under host events")
+            if not args.inject_faults:
+                # (with --inject-faults the identical comparison already
+                # ran above — make_engine refs are single-host either way)
+                rerun_and_compare(args.pipeline_depth, args.route_by_shard,
+                                  "clean single-host")
+            kills = [e for e in host_events if e.kind == "kill"]
+            if kills and cl["host_kills"] < 1:
+                raise SystemExit("engine check: --host-kill armed but no "
+                                 "host actually died")
+            deterministic_kill = (args.loop == "closed" and any(
+                e.at_dispatch is not None for e in kills))
+            if deterministic_kill and cl["cross_host_redispatches"] < 1:
+                raise SystemExit(
+                    "engine check: host killed mid-run but no tile was "
+                    "redispatched across hosts (cross_host_redispatches "
+                    "= 0) — failover did not engage")
 
         # the occupancy and gather-count gates compare counters across
         # runs, which is only deterministic in the clockless closed loop
@@ -547,6 +653,34 @@ def build_parser():
                          "exercises the retry -> oracle recovery ladder")
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="seed for the --inject-faults chaos plan")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="serve through the multi-host ClusterEngine "
+                         "fabric: N per-host workers (isolated "
+                         "SceneCache + TileExecutor, each over its own "
+                         "device-group sub-mesh under --shard-weights) "
+                         "behind one global scheduler with heartbeats, "
+                         "cross-host failover, per-host scene quarantine "
+                         "and aggregate SLO admission")
+    ap.add_argument("--host-kill", action="append", default=[],
+                    metavar="HOST:AT",
+                    help="kill host HOST at AT seconds from start, or at "
+                         "global dispatch count N with HOST:@N (the "
+                         "deterministic CI form); repeatable; requires "
+                         "--hosts >= 2")
+    ap.add_argument("--host-slow", action="append", default=[],
+                    metavar="HOST:AT",
+                    help="from AT (seconds or @dispatches), every "
+                         "dispatch on HOST pays --host-slow-extra-ms of "
+                         "added latency (the health layer should flag "
+                         "it suspect); repeatable")
+    ap.add_argument("--host-slow-extra-ms", type=float, default=50.0,
+                    help="added per-dispatch latency for --host-slow")
+    ap.add_argument("--service-prior-ms", type=float, default=None,
+                    help="seed the SLO admission service estimate "
+                         "(per-tile) before any tile has drained — "
+                         "closes the cold-start hole where a burst at "
+                         "an empty engine was admitted wholesale and "
+                         "then mass-expired")
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero unless all requests completed, "
                          "cache hit rate > 0, and coalescing saved "

@@ -188,13 +188,17 @@ def attn_needs_batch_reshard(n_heads: int) -> bool:
 PLCORE_SHARD_AXES: Tuple[str, ...] = ("pod", "data")
 
 
-def plcore_mesh(n_devices: Optional[int] = None) -> Mesh:
+def plcore_mesh(n_devices: Optional[int] = None,
+                devices: Optional[list] = None) -> Mesh:
     """1-D ("data",) mesh over the first ``n_devices`` local devices
-    (default: all). The trunk stacks shard over whichever of
-    ("pod","data") the mesh carries; an axis whose size does not divide
-    the layer count degrades to replicated (``plcore_stack_spec``), so
-    this is always safe to build — a 1-device mesh just replicates."""
-    devs = jax.devices()
+    (default: all), or over an explicit ``devices`` group — the
+    multi-host serving fabric hands each host its own contiguous slice
+    of the process's devices so every host's mesh is disjoint. The
+    trunk stacks shard over whichever of ("pod","data") the mesh
+    carries; an axis whose size does not divide the layer count
+    degrades to replicated (``plcore_stack_spec``), so this is always
+    safe to build — a 1-device mesh just replicates."""
+    devs = list(devices) if devices is not None else jax.devices()
     n = len(devs) if n_devices is None else max(1, min(int(n_devices),
                                                        len(devs)))
     return Mesh(np.array(devs[:n]), ("data",))

@@ -78,6 +78,36 @@ class StragglerMonitor:
             self.events.append(("evict", self.n_steps, h))
         return verdict
 
+    # -------------------------------------------- host-level flagging -----
+    def record_host_step(self, host, duration_s: float) -> None:
+        """Feed ONE host's service sample outside the global step path —
+        the serving cluster's per-host service EWMA (each host drains its
+        own tiles on its own cadence, so there is no single step that
+        covers all hosts the way ``record_step(per_host=...)`` assumes).
+        Slow-streak/eviction verdicts stay with ``record_step``; this
+        site only maintains the EWMA that ``slow_hosts`` compares."""
+        a = self.cfg.ewma_alpha
+        st = self.hosts.setdefault(host, HostStats())
+        st.n += 1
+        st.ewma = (duration_s if st.ewma == 0
+                   else (1 - a) * st.ewma + a * duration_s)
+
+    def host_ewma(self, host) -> float:
+        st = self.hosts.get(host)
+        return st.ewma if st else 0.0
+
+    def slow_hosts(self) -> list:
+        """Hosts whose service EWMA exceeds ``slow_factor`` x the median
+        host EWMA — the cluster marks these ``suspect`` (deprioritized
+        for placement, still served). Needs >= 2 hosts with samples: a
+        lone host has no peer to be slow relative to."""
+        ewmas = {h: s.ewma for h, s in self.hosts.items() if s.ewma > 0}
+        if len(ewmas) < 2:
+            return []
+        med = _median(list(ewmas.values()))
+        return [h for h, e in ewmas.items()
+                if e > self.cfg.slow_factor * med]
+
     def summary(self) -> dict:
         return {"steps": self.n_steps, "ewma_s": self.global_ewma,
                 "events": list(self.events),

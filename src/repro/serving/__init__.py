@@ -24,10 +24,20 @@ dataflow):
                      service time.
 * ``faults``       — deterministic seeded fault injection (dispatch
                      errors, corrupted tiles, loader failures,
-                     stragglers) exercising the engine's recovery
-                     ladder: retry -> oracle fallback, loader backoff,
-                     straggler redispatch, SLO admission + expiry.
+                     stragglers, host kills/slow-downs) exercising the
+                     engine's recovery ladder: retry -> oracle fallback,
+                     loader backoff, straggler redispatch, SLO admission
+                     + expiry.
+* ``cluster``      — the multi-host fabric: a ``HostPool`` of isolated
+                     per-host cache+executor workers (each over its own
+                     sub-mesh) behind one global ``ClusterScheduler``;
+                     heartbeat health states, cross-host tile failover,
+                     per-host scene quarantine with recovery probes,
+                     aggregate SLO admission, graceful drain/rejoin.
 """
+from repro.serving.cluster import (HOST_STATES, ClusterEngine,
+                                   ClusterScheduler, Host, HostEvent,
+                                   HostPool, split_devices)
 from repro.serving.engine import (STATUSES, CompletionSink, RenderEngine,
                                   RenderRequest, RenderResult,
                                   TileExecutor, TileScheduler)
@@ -39,4 +49,6 @@ from repro.serving.scene_cache import SceneCache, SceneLoadError
 __all__ = ["RenderEngine", "RenderRequest", "RenderResult", "SceneCache",
            "SceneLoadError", "TileScheduler", "TileExecutor",
            "CompletionSink", "FaultConfig", "FaultPlan",
-           "InjectedDispatchError", "InjectedLoaderError", "STATUSES"]
+           "InjectedDispatchError", "InjectedLoaderError", "STATUSES",
+           "ClusterEngine", "ClusterScheduler", "Host", "HostEvent",
+           "HostPool", "HOST_STATES", "split_devices"]

@@ -187,7 +187,11 @@ class _Active:
 class _Tile:
     """One coalesced dispatch unit flowing scheduler -> executor ->
     completion. ``spans`` records which request contributed which rays,
-    so the completion layer can scatter out of order."""
+    so the completion layer can scatter out of order. ``host_id`` /
+    ``prev_host`` only matter under the multi-host cluster
+    (``serving.cluster``): the host the tile is placed on, and the last
+    host it was actually dispatched on — a re-dispatch on a different
+    host is the cross-host failover the cluster counts."""
     scene_id: str
     pp: object                              # resident PackedPlcore
     spans: List[tuple]                      # (_Active, start, take)
@@ -196,6 +200,8 @@ class _Tile:
     n_real: int                             # non-pad rays
     home_cell: Optional[int] = None         # shard-locality routing
     degraded: bool = False                  # coarse-only program
+    host_id: Optional[int] = None           # cluster placement
+    prev_host: Optional[int] = None         # last host that dispatched it
 
 
 # ---------------------------------------------------------------------------
@@ -216,7 +222,8 @@ class TileScheduler:
                  degrade_on_overload: bool = False,
                  degrade_queue_tiles: int = 8,
                  degrade_max_priority: int = 0,
-                 max_load_failures: int = 3):
+                 max_load_failures: int = 3,
+                 tile_service_prior_s: Optional[float] = None):
         self.cache = cache
         self.tile_rays = int(tile_rays)
         # stickiness bound: after this many consecutive tiles for one
@@ -233,6 +240,7 @@ class TileScheduler:
         self.degrade_queue_tiles = int(degrade_queue_tiles)
         self.degrade_max_priority = int(degrade_max_priority)
         self.max_load_failures = int(max_load_failures)
+        self.tile_service_prior_s = tile_service_prior_s
         self.queue: List[_Active] = []
         self._seq = 0
         self._current_scene: Optional[str] = None
@@ -246,9 +254,14 @@ class TileScheduler:
     def _estimated_queueing_s(self) -> Optional[float]:
         """Predicted wait until a NEW request's first ray is tiled: the
         backlog ahead of it (queued tiles + in-flight slots) times the
-        observed per-tile service EWMA. ``None`` until the executor has
-        drained at least one tile (cold engines admit optimistically)."""
-        ewma = self.stats.get("tile_service_s_ewma")
+        observed per-tile service EWMA. Before the executor has drained a
+        tile the estimator falls back to ``tile_service_prior_s`` — the
+        cold-start hole (a cold engine under burst load used to admit
+        EVERYTHING, then mass-expire once the real service rate showed
+        up); with neither observation nor prior it still returns ``None``
+        (admit optimistically, the pre-prior behavior)."""
+        ewma = (self.stats.get("tile_service_s_ewma")
+                or self.tile_service_prior_s)
         if not ewma:
             return None
         backlog = -(-sum(a.remaining for a in self.queue) // self.tile_rays)
@@ -393,12 +406,15 @@ class TileScheduler:
                     a, "partial" if a.n_done > 0 else "rejected",
                     error=f"scene load failed: {err}")
 
-    def next_tile(self) -> Optional[_Tile]:
-        """Coalesce ONE tile from the best loadable scene's pending
-        requests in queue order; None when no request has rays left to
-        hand out (or every candidate scene's loader is failing — their
-        requests stay queued through the cache's backoff window and are
-        terminated when the scene is declared dead)."""
+    def _resolve_scene(self):
+        """Pick the best loadable scene and its resident weights:
+        ``(scene_id, pp, cands, host_id)`` or ``None`` when no request
+        has rays left to hand out (or every candidate scene's loader is
+        failing — their requests stay queued through the cache's backoff
+        window and are terminated when the scene is declared dead).
+        ``host_id`` is always ``None`` here; the multi-host
+        ``ClusterScheduler`` overrides this to fold host placement into
+        the same decision."""
         tried = set()
         while True:
             cands = [a for a in self._schedulable()
@@ -413,7 +429,16 @@ class TileScheduler:
                 tried.add(scene)
                 self._note_load_failure(scene, e)
                 continue
-            break
+            return scene, pp, cands, None
+
+    def next_tile(self) -> Optional[_Tile]:
+        """Coalesce ONE tile from the best loadable scene's pending
+        requests in queue order (scene + residency resolution in
+        ``_resolve_scene``); ``None`` when nothing is schedulable."""
+        resolved = self._resolve_scene()
+        if resolved is None:
+            return None
+        scene, pp, cands, host_id = resolved
         if scene != self._current_scene:
             self.stats["scene_switches"] += 1
             self._current_scene = scene
@@ -450,7 +475,8 @@ class TileScheduler:
             self.stats["padded_rays"] += pad
         return _Tile(scene, pp, spans, np.concatenate(chunks_o),
                      np.concatenate(chunks_d), n,
-                     home_cell=self._route(scene, pp), degraded=degraded)
+                     home_cell=self._route(scene, pp), degraded=degraded,
+                     host_id=host_id)
 
 
 # ---------------------------------------------------------------------------
@@ -480,7 +506,8 @@ class TileExecutor:
                  straggler=None, max_tile_retries: int = 2,
                  retry_backoff_s: float = 0.0,
                  max_retry_backoff_s: float = 0.05,
-                 check_finite: bool = True, clock=time.perf_counter):
+                 check_finite: bool = True, clock=time.perf_counter,
+                 redispatch_hook=None):
         if depth < 1:
             raise ValueError(f"pipeline depth must be >= 1, got {depth}")
         self.completion = completion
@@ -489,6 +516,11 @@ class TileExecutor:
         self.depth = int(depth)
         self.faults = faults
         self.straggler = straggler
+        # cluster failover: tried BEFORE the local retry ladder — a tile
+        # that failed here is first offered to a DIFFERENT host; only
+        # when the hook declines (returns None) does the local
+        # retry -> oracle ladder run as the last rung
+        self.redispatch_hook = redispatch_hook
         self.max_tile_retries = int(max_tile_retries)
         self.retry_backoff_s = float(retry_backoff_s)
         self.max_retry_backoff_s = float(max_retry_backoff_s)
@@ -541,6 +573,15 @@ class TileExecutor:
         attempts are accounted per tile and per touched request, the
         oracle rung as ``oracle_fallbacks``."""
         st = self.stats
+        if self.redispatch_hook is not None:
+            # cross-host failover outranks the local ladder: a tile that
+            # failed on THIS host is redispatched to a different healthy
+            # one (bit-exact — same scene weights, per-ray independence);
+            # the local retry -> oracle ladder is the last rung, taken
+            # only when no other host can serve the tile
+            resolved = self.redispatch_hook(tile)
+            if resolved is not None:
+                return resolved
         for attempt in range(self.max_tile_retries):
             st["tile_retries"] += 1
             self._bump_retries(tile)
@@ -655,6 +696,21 @@ class TileExecutor:
         while self.drain_one():
             pass
 
+    def abandon_all(self) -> List[_Tile]:
+        """Drop every in-flight slot WITHOUT materializing its result
+        (the device arrays of a dead host are unreachable) and release
+        the scene pins; returns the abandoned tiles so the cluster can
+        re-queue them for dispatch on a different host. Their rays were
+        already handed out by the scheduler, so re-queueing the tiles —
+        not rewinding the requests — is what keeps every submit answered
+        exactly once."""
+        tiles = []
+        while self._slots:
+            tile, _rgb, _t0, _extra = self._slots.popleft()
+            self.cache.unpin(tile.scene_id)
+            tiles.append(tile)
+        return tiles
+
 
 # ---------------------------------------------------------------------------
 class CompletionSink:
@@ -758,7 +814,10 @@ class RenderEngine:
     when faults are injected, so clean deterministic runs stay
     timing-insensitive); ``check_finite`` asserts delivered framebuffers
     are finite (on by default — a leaked NaN pixel must not ship
-    silently)."""
+    silently); ``tile_service_prior_s`` seeds the admission-control
+    service estimate before any tile has drained, closing the cold-start
+    hole where a burst at an empty engine was admitted wholesale and
+    then mass-expired once the real service rate showed up."""
 
     def __init__(self, cache: SceneCache, *, tile_rays: int = 512,
                  max_sticky_tiles: int = 64, clock=time.perf_counter,
@@ -774,7 +833,8 @@ class RenderEngine:
                  faults: Optional[FaultPlan] = None,
                  straggler_mitigation: Optional[bool] = None,
                  straggler_cfg=None,
-                 check_finite: bool = True):
+                 check_finite: bool = True,
+                 tile_service_prior_s: Optional[float] = None):
         self.cache = cache
         self.faults = faults
         self._clock = clock
@@ -811,7 +871,8 @@ class RenderEngine:
             degrade_on_overload=degrade_on_overload,
             degrade_queue_tiles=degrade_queue_tiles,
             degrade_max_priority=degrade_max_priority,
-            max_load_failures=max_load_failures)
+            max_load_failures=max_load_failures,
+            tile_service_prior_s=tile_service_prior_s)
         self.completion = CompletionSink(self.scheduler, self.stats, clock,
                                          check_finite=check_finite)
         if straggler_mitigation is None:

@@ -31,6 +31,14 @@ counts, and the engine's retry/fallback/redispatch accounting
 (``RenderEngine.robustness``). Latency percentiles are computed over
 delivered requests only — a rejected request's ~0ms "latency" is not a
 latency, and folding it in would make overload look fast.
+
+Multi-host overload mode: ``run_trace(..., host_events=[...])`` arms
+``HostEvent`` schedules (kills / slow-downs at trace-time offsets — or
+dispatch counts, the deterministic CI form) on a ``ClusterEngine``
+before driving it; ``overload_host_events`` builds the canonical
+mid-trace kill + early slow mix. Cluster reports grow a ``cluster``
+block: per-host state / dispatches / goodput proxy, cross-host
+redispatch counts, and quarantine open/probe/recovery counts.
 """
 from __future__ import annotations
 
@@ -40,6 +48,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.serving.cluster import HostEvent
 from repro.serving.engine import RenderEngine, RenderRequest, RenderResult
 
 
@@ -74,6 +83,33 @@ def poisson_trace(n_requests: int, scene_ids: Sequence[str],
     return items
 
 
+def overload_host_events(n_hosts: int, trace_wall_s: float,
+                         *, kill_frac: float = 0.4,
+                         slow_frac: float = 0.15,
+                         slow_extra_s: float = 0.05,
+                         seed: int = 0) -> List[HostEvent]:
+    """The canonical multi-host overload schedule for a trace expected
+    to span ``trace_wall_s``: one host turns SLOW early (``slow_frac``
+    of the trace — the health layer should flag it suspect) and a
+    DIFFERENT host is killed mid-trace (``kill_frac`` — its in-flight
+    tiles must fail over). Host choice is seeded; with one host only
+    the slow event survives (killing the only host just rejects the
+    tail, which is a different scenario)."""
+    if n_hosts < 1:
+        raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
+    rng = np.random.RandomState(seed)
+    victim = int(rng.randint(n_hosts))
+    slow = int(rng.randint(n_hosts - 1))
+    slow = slow if slow < victim else slow + 1    # distinct from victim
+    events = [HostEvent("slow", slow if n_hosts > 1 else victim,
+                        at_s=slow_frac * trace_wall_s,
+                        extra_s=slow_extra_s)]
+    if n_hosts > 1:
+        events.append(HostEvent("kill", victim,
+                                at_s=kill_frac * trace_wall_s))
+    return events
+
+
 def _percentiles_ms(latencies_s: Sequence[float]) -> dict:
     if not latencies_s:
         return {"p50": None, "p95": None, "p99": None}
@@ -91,7 +127,7 @@ def _report(engine: RenderEngine, latencies_s: List[float],
     rb = engine.robustness()
     n_delivered = (rb["status_counts"].get("ok", 0)
                    + rb["status_counts"].get("degraded", 0))
-    return {
+    out = {
         "mode": mode,
         "requests_completed": n,
         "requests_delivered": n_delivered,
@@ -113,6 +149,9 @@ def _report(engine: RenderEngine, latencies_s: List[float],
         "dispatch_savings": st["dispatch_baseline"] - st["dispatches"],
         "cache": engine.cache.stats(),
     }
+    if hasattr(engine, "cluster_stats"):
+        out["cluster"] = engine.cluster_stats()
+    return out
 
 
 def _delivered(results: List[RenderResult]) -> List[RenderResult]:
@@ -173,7 +212,18 @@ def run_closed_loop(engine: RenderEngine, trace: List[TraceItem],
 
 
 def run_trace(engine: RenderEngine, trace: List[TraceItem], *,
-              mode: str = "open", concurrency: int = 4) -> dict:
+              mode: str = "open", concurrency: int = 4,
+              host_events: Optional[List[HostEvent]] = None) -> dict:
+    """Drive one trace. ``host_events`` arms the multi-host overload
+    mode: kill/slow/drain/rejoin schedules applied by the engine's step
+    loop at their trace-time offsets (or dispatch counts). Only a
+    cluster engine can honor them — passing events to a single-host
+    engine is an error, not a silent no-op."""
+    if host_events:
+        if not hasattr(engine, "schedule_host_events"):
+            raise ValueError("host_events requires a ClusterEngine "
+                             "(single-host engines have no hosts to kill)")
+        engine.schedule_host_events(list(host_events))
     if mode == "open":
         return run_open_loop(engine, trace)
     if mode == "closed":

@@ -139,6 +139,24 @@ class SceneCache:
     def pinned(self, scene_id: str) -> bool:
         return scene_id in self._pins
 
+    def discard(self, scene_id: str) -> bool:
+        """Drop one resident entry outside the LRU policy (the cluster's
+        graceful host DRAIN frees a departing host's residency after its
+        in-flight tiles finish). Pinned entries are refused — a drain
+        must never drop weights under a still-in-flight tile. Returns
+        whether an entry was dropped."""
+        if scene_id not in self._entries or scene_id in self._pins:
+            return False
+        del self._entries[scene_id]
+        self.evictions += 1
+        return True
+
+    def failing_scenes(self) -> list:
+        """Scenes currently in load-failure state (>= 1 consecutive real
+        loader failure, backoff window possibly still open). The cluster
+        scheduler reads this per HOST to decide quarantine."""
+        return list(self._failed)
+
     def get(self, scene_id: str) -> PackedPlcore:
         """Fetch a scene, loading (and possibly evicting) on miss. The
         returned instance is resident until LRU eviction pushes it out;

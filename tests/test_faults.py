@@ -257,6 +257,39 @@ def test_slo_admission_control_rejects_predicted_miss(setup):
     assert eng.take(rid2).status == "ok"
 
 
+def test_cold_start_admission_uses_service_prior(setup):
+    cfg, param_sets = setup
+    # regression: before tile_service_prior_s, a COLD engine (no service
+    # EWMA yet) predicted zero queueing delay and admitted every
+    # deadlined request into an arbitrary backlog — the prior closes the
+    # hole until the first real measurement replaces it
+    eng = RenderEngine(SceneCache(_loader(cfg, param_sets)), tile_rays=TILE,
+                       tile_service_prior_s=10.0)
+    assert eng.stats["tile_service_s_ewma"] is None        # genuinely cold
+    eng.submit(RenderRequest(scene_id="scene0", hw=16))    # backlog
+    rid = eng.submit(RenderRequest(scene_id="scene0", hw=8,
+                                   deadline_s=0.5))
+    res = eng.take(rid)
+    assert res.status == "rejected" and "admission control" in res.error
+    # the same cold engine WITHOUT a prior has no estimate and admits
+    # optimistically (the documented pre-prior behavior, still default)
+    eng2 = RenderEngine(SceneCache(_loader(cfg, param_sets)), tile_rays=TILE)
+    eng2.submit(RenderRequest(scene_id="scene0", hw=16))
+    rid2 = eng2.submit(RenderRequest(scene_id="scene0", hw=8,
+                                     deadline_s=0.5))
+    assert rid2 not in eng2.completed          # admitted, not rejected
+    eng.drain()
+    eng2.drain()
+    # a real measurement outranks the prior: once the EWMA exists the
+    # prior no longer dominates the estimate
+    eng.stats["tile_service_s_ewma"] = 1e-6
+    rid3 = eng.submit(RenderRequest(scene_id="scene0", hw=8,
+                                    deadline_s=0.5))
+    assert rid3 not in eng.completed
+    eng.drain()
+    assert eng.take(rid3).status == "ok"
+
+
 def test_deadline_expiry_statuses(setup):
     cfg, param_sets = setup
     clk = _FakeClock()

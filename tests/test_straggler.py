@@ -78,3 +78,28 @@ def test_summary_shape():
 def test_median_odd_and_even():
     assert _median([3.0, 1.0, 2.0]) == 2.0
     assert _median([4.0, 1.0, 2.0, 3.0]) == 2.5
+
+
+def test_record_host_step_feeds_slow_hosts():
+    # the serving cluster's per-host site: EWMA-only updates outside the
+    # global step path (hosts drain on their own cadence), compared by
+    # slow_hosts() against slow_factor x the median host EWMA
+    m = StragglerMonitor(StragglerConfig(slow_factor=1.5))
+    m.record_host_step(0, 0.01)
+    assert m.host_ewma(0) == 0.01
+    assert m.slow_hosts() == []               # one host has no peer
+    m.record_host_step(1, 1.0)
+    assert m.slow_hosts() == [1]
+    assert m.host_ewma(7) == 0.0              # unknown host: no samples
+    # record_host_step never touches the global step path
+    assert m.n_steps == 0 and m.global_ewma == 0.0
+
+
+def test_record_host_step_ewma_converges():
+    m = StragglerMonitor(StragglerConfig(slow_factor=1.5, ewma_alpha=0.5))
+    m.record_host_step(0, 0.01)
+    m.record_host_step(1, 1.0)
+    for _ in range(20):                       # host 1 recovers
+        m.record_host_step(1, 0.01)
+    assert m.slow_hosts() == []
+    assert m.host_ewma(1) < 0.02
