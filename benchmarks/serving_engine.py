@@ -203,6 +203,29 @@ def run() -> dict:
         engine_mh, trace, mode="closed", concurrency=4,
         host_events=[HostEvent("kill", busy.id, at_dispatch=kill_at)])
 
+    # observability pass: the SAME trace tracing-off vs tracing-on,
+    # interleaved rounds + min wall each — prices the SpanTracer on the
+    # hot path (the NULL_TRACER fast path must stay ~free; the armed
+    # tracer's cost is the number this block tracks across PRs) and
+    # holds the traced run to full span-chain integrity
+    from repro.obs import SpanTracer
+    from repro.obs.export import validate_trace
+    reps_off, reps_on = [], []
+    tracers = []
+    for _ in range(3):
+        eng_off = RenderEngine(cache, tile_rays=tile_rays)
+        reps_off.append(loadgen.run_trace(eng_off, trace, mode="closed",
+                                          concurrency=4))
+        tracer = SpanTracer()
+        eng_on = RenderEngine(cache, tile_rays=tile_rays, tracer=tracer)
+        reps_on.append(loadgen.run_trace(eng_on, trace, mode="closed",
+                                         concurrency=4))
+        tracers.append(tracer)
+    rep_off = min(reps_off, key=lambda r: r["wall_s"])
+    i_on = min(range(len(reps_on)), key=lambda i: reps_on[i]["wall_s"])
+    rep_on = reps_on[i_on]
+    integ = validate_trace(tracers[i_on])
+
     out = {
         "scenes": n_scenes, "requests": n_requests, "tile_rays": tile_rays,
         "req_per_s": rep["req_per_s"], "rays_per_s": rep["rays_per_s"],
@@ -303,6 +326,21 @@ def run() -> dict:
                 if rep_mh["cluster"]["mean_failover_latency_s"] is not None
                 else None),
         },
+        # lifecycle tracing priced against the NULL_TRACER fast path on
+        # the same closed-loop trace (min wall over interleaved rounds);
+        # the traced run must also pass the span-chain integrity check
+        "observability": {
+            "req_per_s_untraced": rep_off["req_per_s"],
+            "req_per_s_traced": rep_on["req_per_s"],
+            "tracing_overhead_pct": (
+                round((rep_on["wall_s"] / rep_off["wall_s"] - 1.0) * 100, 2)
+                if rep_off["wall_s"] else None),
+            "spans": rep_on["observability"]["spans"],
+            "events": rep_on["observability"]["events"],
+            "dropped_spans": rep_on["observability"]["dropped"],
+            "trace_integrity_ok": integ["ok"],
+            "dispatched_tiles": integ["dispatched_tiles"],
+        },
     }
     emit("serving/req_per_s", 0.0, f"req_per_s={out['req_per_s']}")
     emit("serving/pipelined_req_per_s", 0.0,
@@ -329,6 +367,11 @@ def run() -> dict:
          f"goodput={mh['goodput']}_kills={mh['host_kills']}"
          f"_xhost={mh['cross_host_redispatches']}"
          f"_failover_ms={mh['mean_failover_latency_ms']}")
+    ob = out["observability"]
+    emit("serving/observability_overhead", 0.0,
+         f"traced_{ob['req_per_s_traced']}_vs_{ob['req_per_s_untraced']}"
+         f"_overhead={ob['tracing_overhead_pct']}pct"
+         f"_integrity={'ok' if ob['trace_integrity_ok'] else 'FAIL'}")
     return out
 
 

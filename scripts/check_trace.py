@@ -1,0 +1,88 @@
+#!/usr/bin/env python
+"""CI artifact gate for the observability exports.
+
+Validates what a ``serve.py --trace-out/--metrics-out`` run actually
+wrote to disk — not the in-process state the serving gate already
+checked — so a schema drift between exporter and validator (or a
+truncated write) fails CI:
+
+* the Chrome trace JSON parses, every event carries the required
+  trace-event fields, and the span chain replayed FROM THE FILE passes
+  the same tile-lifecycle integrity check ``serve.py --check`` ran
+  in-process (every dispatched tile terminal, every traced request
+  exactly one submit/terminal pair);
+* the Prometheus text file (optional second argument) parses line-wise:
+  every sample line belongs to a ``# TYPE``-declared family and carries
+  a numeric value, and at least one engine counter is present.
+
+Usage: python scripts/check_trace.py TRACE_JSON [METRICS_PROM]
+"""
+import json
+import re
+import sys
+
+
+def check_trace(path: str) -> dict:
+    sys.path.insert(0, "src")
+    from repro.obs.export import validate_chrome_trace
+
+    with open(path) as f:
+        obj = json.load(f)
+    out = validate_chrome_trace(obj)
+    if not out["ok"]:
+        raise SystemExit(f"trace check: {path} FAILED:\n  "
+                         + "\n  ".join(out["errors"]))
+    if out["dispatched_tiles"] < 1:
+        raise SystemExit(f"trace check: {path} has no dispatched tiles — "
+                         f"the traced run exercised nothing")
+    return out
+
+
+_SAMPLE = re.compile(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{[^}]*\})? "
+                     r"(-?[0-9.eE+-]+|NaN|[+-]Inf)$")
+
+
+def check_metrics(path: str) -> int:
+    declared = set()
+    samples = 0
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            line = line.rstrip("\n")
+            if not line:
+                continue
+            if line.startswith("# TYPE "):
+                declared.add(line.split()[2])
+                continue
+            if line.startswith("#"):
+                continue
+            m = _SAMPLE.match(line)
+            if not m:
+                raise SystemExit(f"metrics check: {path}:{i}: unparseable "
+                                 f"sample line {line!r}")
+            name = m.group(1)
+            base = re.sub(r"_(bucket|sum|count)$", "", name)
+            if name not in declared and base not in declared:
+                raise SystemExit(f"metrics check: {path}:{i}: sample "
+                                 f"{name!r} has no # TYPE declaration")
+            samples += 1
+    if not any(d.startswith("engine_") for d in declared):
+        raise SystemExit(f"metrics check: {path} carries no engine_* "
+                         f"families — the engine registry was not merged")
+    return samples
+
+
+def main(argv):
+    if len(argv) < 2:
+        raise SystemExit(__doc__)
+    out = check_trace(argv[1])
+    msg = (f"trace OK: {out['events']} events, {out['tiles']} tiles "
+           f"({out['dispatched_tiles']} dispatched, all terminal), "
+           f"{out['requests']} requests")
+    if len(argv) > 2:
+        n = check_metrics(argv[2])
+        msg += f"; metrics OK: {n} samples"
+    print(msg)
+
+
+if __name__ == "__main__":
+    main(sys.argv)

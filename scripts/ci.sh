@@ -70,6 +70,19 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     --hosts 2 --shard-weights --shard-devices 4 --host-kill "1:@6" \
     --pipeline-depth 2 --check
 
+echo "== observability chaos smoke (trace + metrics export, span-chain gate) =="
+# the chaos trace rerun with lifecycle tracing armed: --check additionally
+# gates span-chain integrity in-process (every dispatched tile reaches a
+# terminal scatter/drop, every submit exactly one terminal request span),
+# then check_trace.py re-validates the WRITTEN artifacts — Chrome trace
+# JSON schema + the same chain check replayed from the file, and the
+# Prometheus text parses with the engine registry merged in
+python -m repro.launch.serve --mode engine --scenes 3 --requests 9 \
+    --hw-mix 12,16 --tile-rays 128 --loop closed --seed 0 \
+    --inject-faults --fault-seed 0 --check \
+    --trace-out runs/ci_trace.json --metrics-out runs/ci_metrics.prom
+python scripts/check_trace.py runs/ci_trace.json runs/ci_metrics.prom
+
 echo "== docs link check =="
 python scripts/check_docs_links.py
 

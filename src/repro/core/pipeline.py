@@ -386,7 +386,8 @@ class PackedPlcore:
     def dispatch_tile(self, o_tile, d_tile, *,
                       home_cell: Optional[int] = None,
                       ert_eps: Optional[float] = None,
-                      coarse_only: bool = False):
+                      coarse_only: bool = False,
+                      tracer=None, trace_attrs=None):
         """The pipelined executor's entry point: dispatch ONE coalesced
         ray tile and return ``(rgb, gather_cost)`` — ``rgb`` an
         UN-BLOCKED device array (jax async dispatch: the host returns as
@@ -397,7 +398,20 @@ class PackedPlcore:
         dispatch is accounted at. ``coarse_only`` selects the
         overload-degradation program (same gather model — the coarse
         trunk stack still gathers; the accounting difference is noise
-        next to the 3x sample saving)."""
-        return (self.render_tile(o_tile, d_tile, ert_eps=ert_eps,
-                                 coarse_only=coarse_only),
-                self.tile_gather_cost(home_cell))
+        next to the 3x sample saving). ``tracer``/``trace_attrs`` record
+        the host-side enqueue as a ``plcore.dispatch`` span — it covers
+        program enqueue only, not device compute (which the executor's
+        ``tile.device_compute`` span measures at the drain)."""
+        if tracer is not None:
+            t0 = tracer.clock()
+        rgb = self.render_tile(o_tile, d_tile, ert_eps=ert_eps,
+                               coarse_only=coarse_only)
+        cost = self.tile_gather_cost(home_cell)
+        if tracer is not None:
+            tracer.complete("plcore.dispatch", t0, cat="plcore",
+                            rays=int(o_tile.shape[0]),
+                            coarse_only=bool(coarse_only),
+                            gather_layers=cost["layers"],
+                            gather_bytes=cost["bytes"],
+                            **(trace_attrs or {}))
+        return rgb, cost

@@ -58,12 +58,18 @@ def _place_rows(src, rows: int):
 # tests assert render calls never re-pack. Counts traces, not executions —
 # a pack inside a jitted call re-executes its pad/stack ops every dispatch
 # even though the counter only ticks at trace time, which is exactly why
-# the serving path pre-packs.
-_PACK_COUNT = 0
+# the serving path pre-packs. Registry-backed (process-global metrics
+# registry) so the Prometheus/snapshot exporters see it; the accessor API
+# is unchanged.
+from repro.obs.metrics import global_registry as _obs_registry
+
+_PACKS = _obs_registry().counter(
+    "plcore_weight_packs_total",
+    "stack_plcore_weights invocations (trace-time)")
 
 
 def pack_count() -> int:
-    return _PACK_COUNT
+    return int(_PACKS.value)
 
 
 # Kernel-dispatch counter (same trace-time semantics as pack_count): each
@@ -71,11 +77,13 @@ def pack_count() -> int:
 # coarse/fine chain ticks twice per render; the fused two-pass chain must
 # tick exactly ONCE — tests assert the C1 "one kernel per ray tile" claim
 # through this counter.
-_DISPATCH_COUNT = 0
+_DISPATCHES = _obs_registry().counter(
+    "plcore_kernel_dispatches_total",
+    "pallas_call kernel launches issued (trace-time)")
 
 
 def dispatch_count() -> int:
-    return _DISPATCH_COUNT
+    return int(_DISPATCHES.value)
 
 
 def stack_plcore_weights(cfg: NerfConfig, params: dict,
@@ -87,8 +95,7 @@ def stack_plcore_weights(cfg: NerfConfig, params: dict,
     quant != None -> RMCM layout: uint8 magnitudes + bit-packed signs +
     (1, out) scales for trunk/feat/color0 (MONB); sigma/rgb stay exact
     (SONB)."""
-    global _PACK_COUNT
-    _PACK_COUNT += 1
+    _PACKS.inc()
     W, C = cfg.trunk_width, cfg.color_width
     pe, de = cfg.pos_enc_dim, cfg.dir_enc_dim
     L = cfg.trunk_layers
@@ -240,8 +247,7 @@ def fused_render(cfg: NerfConfig, params: Optional[dict], rays_o, rays_d, t,
     optional (R,) mask for Cicero-style early ray termination — all-dead
     kernel tiles skip MLP+VRU work.
     """
-    global _DISPATCH_COUNT
-    _DISPATCH_COUNT += 1
+    _DISPATCHES.inc()
     it = interpret_default() if interpret is None else interpret
     R, N = t.shape
     rt = rt or pick_ray_tile(cfg, N, vmem_budget_bytes)
@@ -326,8 +332,7 @@ def fused_render_two_pass(cfg: NerfConfig, packed: dict, rays_o, rays_d, *,
     rgb_coarse, acc, acc_coarse, depth}, each trimmed to R rays; white
     background is the caller's composite.
     """
-    global _DISPATCH_COUNT
-    _DISPATCH_COUNT += 1
+    _DISPATCHES.inc()
     it = interpret_default() if interpret is None else interpret
     from repro.core import sampling
     R = rays_o.shape[0]

@@ -348,6 +348,15 @@ def serve_engine(args) -> dict:
     prior_s = (None if args.service_prior_ms is None
                else args.service_prior_ms / 1e3)
 
+    # --trace-out arms lifecycle tracing on the PRIMARY engine only:
+    # reference reruns stay untraced, so the exported span stream
+    # describes exactly one run and the integrity gate can hold every
+    # dispatched tile to a terminal scatter/drop
+    tracer = None
+    if args.trace_out:
+        from repro.obs import SpanTracer
+        tracer = SpanTracer(sample_every=args.trace_sample)
+
     def make_engine(depth, routed, *, chaos=False, use_cache=None):
         # reference reruns are always CLEAN and SINGLE-HOST: no fault
         # plan (reusing the primary plan would continue its RNG streams,
@@ -358,7 +367,8 @@ def serve_engine(args) -> dict:
                   route_by_shard=routed, max_queue=args.max_queue,
                   degrade_on_overload=args.degrade_on_overload,
                   faults=plan if chaos else None,
-                  tile_service_prior_s=prior_s)
+                  tile_service_prior_s=prior_s,
+                  tracer=tracer if chaos else None)
         if chaos and args.hosts > 1:
             caches = [SceneCache(plan.wrap_loader(make_loader(m))
                                  if plan else make_loader(m),
@@ -385,6 +395,28 @@ def serve_engine(args) -> dict:
     stats = loadgen.run_trace(engine, trace, mode=args.loop,
                               concurrency=args.concurrency,
                               host_events=host_events or None)
+    if tracer is not None:
+        # flush: deadline expiry can leave drained-but-unscattered slots
+        # behind once pending hits 0 — drain closes their span chains so
+        # the integrity gate sees every dispatched tile reach a terminal
+        engine.drain()
+    trace_integrity = None
+    if args.trace_out:
+        from repro.obs.export import validate_trace, write_chrome_trace
+        tpath = Path(args.trace_out)
+        tpath.parent.mkdir(parents=True, exist_ok=True)
+        write_chrome_trace(tracer, str(tpath))
+        trace_integrity = validate_trace(tracer)
+        stats_tr = dict(tracer.summary())
+        stats_tr["integrity"] = trace_integrity
+        stats_tr["trace_out"] = str(tpath)
+    if args.metrics_out:
+        from repro.obs.export import prometheus_text
+        from repro.obs.metrics import global_registry
+        mpath = Path(args.metrics_out)
+        mpath.parent.mkdir(parents=True, exist_ok=True)
+        mpath.write_text(prometheus_text(engine.registry,
+                                         global_registry()))
     stats = {"scenes": args.scenes, "tile_rays": args.tile_rays,
              "kernel": bool(args.kernel),
              "fuse_two_pass": bool(args.fuse_two_pass),
@@ -395,6 +427,11 @@ def serve_engine(args) -> dict:
              "hosts": args.hosts,
              "host_events": [f"{e.kind}:{e.host}" for e in host_events],
              "deadline_ms": args.deadline_ms, **stats}
+    if args.trace_out:
+        stats["observability"] = stats_tr
+    if args.metrics_out:
+        stats.setdefault("observability", {})["metrics_out"] = \
+            str(args.metrics_out)
     if shard_mesh is not None:
         from repro.runtime import sharding as rsh
         stats["shard_devices"] = int(shard_mesh.size)
@@ -410,6 +447,18 @@ def serve_engine(args) -> dict:
         if stats["dispatch_savings"] < 0:
             raise SystemExit("engine check: coalescing issued MORE "
                              "dispatches than the per-request baseline")
+        if trace_integrity is not None:
+            # span-chain integrity: every dispatched tile must have
+            # walked a legal lifecycle to a terminal scatter/drop, and
+            # every traced submit must map to exactly one terminal
+            # request span — an orphan chain means lost pixels
+            if trace_integrity["dispatched_tiles"] < 1:
+                raise SystemExit("engine check: --trace-out armed but "
+                                 "the trace recorded no dispatched tiles")
+            if not trace_integrity["ok"]:
+                raise SystemExit(
+                    "engine check: trace integrity FAILED:\n  "
+                    + "\n  ".join(trace_integrity["errors"]))
         if shard_mesh is not None and stats["weight_shards"] <= 1:
             # --shard-weights degrading to replicated must not pass the
             # CI gate green: it means the mesh size does not divide the
@@ -681,6 +730,23 @@ def build_parser():
                          "closes the cold-start hole where a burst at "
                          "an empty engine was admitted wholesale and "
                          "then mass-expired")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="arm per-tile lifecycle tracing on the primary "
+                         "engine and write a Chrome trace-event JSON "
+                         "(Perfetto / chrome://tracing loadable; one "
+                         "process track per host, one thread track per "
+                         "executor slot); with --check, additionally "
+                         "gates span-chain integrity — every dispatched "
+                         "tile must reach a terminal scatter/drop")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the merged metrics registries (engine + "
+                         "process-global kernel counters) in Prometheus "
+                         "text exposition format after the run")
+    ap.add_argument("--trace-sample", type=int, default=1, metavar="N",
+                    help="sample request lifecycle chains: trace 1 in N "
+                         "requests (tile/cache/host records stay "
+                         "always-on, so the integrity gate still covers "
+                         "100%% of dispatched tiles)")
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero unless all requests completed, "
                          "cache hit rate > 0, and coalescing saved "

@@ -309,18 +309,25 @@ def plcore_owned_layer_mask(mesh: Mesh, n_layers: int,
 # ticks once per layer per stacked array when a render program TRACES;
 # cached program re-runs tick nothing. Tests pin the just-in-time gather
 # structure (L independent collectives, not one monolithic all-gather)
-# through this counter. ``_PLCORE_GATHER_BYTES`` ticks alongside with the
-# replicated per-layer bytes — the modeled gathered-layer traffic.
-_PLCORE_GATHER_COUNT = 0
-_PLCORE_GATHER_BYTES = 0
+# through this counter. Gather BYTES tick alongside with the replicated
+# per-layer bytes — the modeled gathered-layer traffic. Both live in the
+# process-global metrics registry (exporter-visible); accessors unchanged.
+from repro.obs.metrics import global_registry as _obs_registry
+
+_GATHERS = _obs_registry().counter(
+    "plcore_layer_gathers_total",
+    "per-layer all-gather collectives traced")
+_GATHER_BYTES = _obs_registry().counter(
+    "plcore_layer_gather_bytes_total",
+    "modeled replicated bytes of traced layer gathers", unit="bytes")
 
 
 def plcore_gather_count() -> int:
-    return _PLCORE_GATHER_COUNT
+    return int(_GATHERS.value)
 
 
 def plcore_gather_bytes() -> int:
-    return _PLCORE_GATHER_BYTES
+    return int(_GATHER_BYTES.value)
 
 
 def gather_plcore_stack(stack, mesh: Mesh):
@@ -329,13 +336,12 @@ def gather_plcore_stack(stack, mesh: Mesh):
     individually, so XLA sees L independent collectives it can schedule
     just-in-time — layer i's gather overlaps the layer i-1 matmul —
     instead of one monolithic all-gather blocking the whole trunk."""
-    global _PLCORE_GATHER_COUNT, _PLCORE_GATHER_BYTES
     repl = NamedSharding(mesh, P())
     per_layer = int(np.prod(stack.shape[1:])) * stack.dtype.itemsize
     layers = []
     for i in range(stack.shape[0]):
-        _PLCORE_GATHER_COUNT += 1
-        _PLCORE_GATHER_BYTES += per_layer
+        _GATHERS.inc()
+        _GATHER_BYTES.inc(per_layer)
         layers.append(jax.lax.with_sharding_constraint(stack[i], repl))
     return jnp.stack(layers)
 

@@ -60,6 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import CLUSTER_STATS_SCHEMA, extend_stats_view
 from repro.serving.engine import (RenderEngine, TileExecutor, TileScheduler,
                                   _Tile)
 from repro.serving.scene_cache import SceneCache, SceneLoadError
@@ -204,6 +205,9 @@ class _HostExecutor(TileExecutor):
         if self.host is not None:
             self.host.dispatches += 1
             self.host.beat(self._clock())
+            m = getattr(self.stats, "m", None)
+            if m is not None:
+                m.host_dispatches.labels(host=self.host.id).inc()
 
     def _update_service_ewma(self, dt: float) -> None:
         super()._update_service_ewma(dt)
@@ -215,6 +219,10 @@ class _HostExecutor(TileExecutor):
         h.beat(self._clock())
         if self.straggler is not None:
             self.straggler.record_host_step(h.id, dt)
+        m = getattr(self.stats, "m", None)
+        if m is not None:
+            m.host_service_seconds.labels(host=h.id).observe(dt)
+            m.host_service_ewma.labels(host=h.id).set(h.service_ewma)
 
 
 # ---------------------------------------------------------------------------
@@ -338,11 +346,15 @@ class ClusterScheduler(TileScheduler):
         if qkey in self._quarantine:
             self._quarantine[qkey] = self.quarantine_probe_tiles
             self.stats["quarantine_probes"] += 1
+            self.tracer.event("host.quarantine_probe", cat="host",
+                              host=host.id, scene=scene)
         elif (not err.fail_fast
               and host.cache.consecutive_failures(scene)
               >= self.max_load_failures):
             self._quarantine[qkey] = self.quarantine_probe_tiles
             self.stats["quarantines"] += 1
+            self.tracer.event("host.quarantine", cat="host",
+                              host=host.id, scene=scene)
         else:
             return
         self._maybe_declare_dead(scene)
@@ -352,6 +364,8 @@ class ClusterScheduler(TileScheduler):
         entry is a recovered probe: lift the quarantine."""
         if self._quarantine.pop((host.id, scene), None) is not None:
             self.stats["quarantine_recoveries"] += 1
+            self.tracer.event("host.quarantine_recovery", cat="host",
+                              host=host.id, scene=scene)
 
     def _maybe_declare_dead(self, scene: str) -> None:
         hosts = self.pool.placeable()
@@ -400,6 +414,16 @@ class ClusterScheduler(TileScheduler):
         tile._requeued_at = now
         self._requeue.append(tile)
         self.stats["requeued_tiles"] += 1
+        self.tracer.event("tile.requeue", cat="tile", tile=tile.tid,
+                          host=tile.host_id, scene=tile.scene_id)
+
+    def _drop_tile(self, tile: _Tile, reason: str) -> None:
+        """Terminal trace record for a tile leaving the system without a
+        scatter — the span-chain validator requires every tile id to end
+        in ``tile.scatter`` or ``tile.drop``."""
+        self.tracer.event("tile.drop", cat="tile", tile=tile.tid,
+                          host=tile.host_id, scene=tile.scene_id,
+                          reason=reason)
 
     def _next_requeued(self) -> Optional[_Tile]:
         """Re-place abandoned tiles ahead of fresh coalescing. Each gets
@@ -412,6 +436,7 @@ class ClusterScheduler(TileScheduler):
         for _ in range(len(self._requeue)):
             tile = self._requeue.popleft()
             if all(a.terminal for a, _, _ in tile.spans):
+                self._drop_tile(tile, "all_requests_terminal")
                 continue
             host = self._place(tile.scene_id)
             if host is None:
@@ -422,6 +447,7 @@ class ClusterScheduler(TileScheduler):
                             error=(f"re-queued tile for scene "
                                    f"{tile.scene_id!r} has no serving "
                                    f"host"))
+                    self._drop_tile(tile, "no_placeable_host")
                     continue
                 self._requeue.append(tile)
                 continue
@@ -478,10 +504,11 @@ class ClusterEngine(RenderEngine):
                  retry_backoff_s: float = 0.0,
                  faults=None, straggler_mitigation: Optional[bool] = None,
                  straggler_cfg=None, check_finite: bool = True,
-                 tile_service_prior_s: Optional[float] = None):
+                 tile_service_prior_s: Optional[float] = None,
+                 tracer=None, registry=None):
         if not caches:
             raise ValueError("ClusterEngine needs at least one host cache")
-        # the base ctor builds the stats dict, completion sink and the
+        # the base ctor builds the stats view, completion sink and the
         # single-host scheduler/executor wiring; the throwaway scheduler
         # and executor are replaced below with their cluster versions
         super().__init__(
@@ -497,23 +524,9 @@ class ClusterEngine(RenderEngine):
             retry_backoff_s=retry_backoff_s, faults=faults,
             straggler_mitigation=straggler_mitigation,
             straggler_cfg=straggler_cfg, check_finite=check_finite,
-            tile_service_prior_s=tile_service_prior_s)
-        self.stats.update({
-            "cross_host_redispatches": 0,   # tiles recovered on another host
-            "host_kills": 0,
-            "host_slow_events": 0,
-            "requeued_tiles": 0,            # abandoned by a dead host
-            "quarantines": 0,               # (host, scene) windows opened
-            "quarantine_probes": 0,         # failed recovery probes
-            "quarantine_recoveries": 0,     # lifted quarantines
-            "affinity_migrations": 0,       # drain-time residency handoffs
-            "heartbeat_timeouts": 0,
-            "slow_host_flags": 0,           # healthy -> suspect transitions
-            "host_drains": 0,
-            "host_rejoins": 0,
-            "failovers": 0,                 # re-queued tiles re-dispatched
-            "failover_latency_s": 0.0,      # summed requeue -> redispatch
-        })
+            tile_service_prior_s=tile_service_prior_s,
+            tracer=tracer, registry=registry)
+        extend_stats_view(self.stats, CLUSTER_STATS_SCHEMA)
         self.heartbeat_timeout_s = float(heartbeat_timeout_s)
         self.hang_kill_steps = int(hang_kill_steps)
         self.monitor = self.executor.straggler   # shared across hosts
@@ -525,12 +538,15 @@ class ClusterEngine(RenderEngine):
         mesh_list = meshes or [None] * len(caches)
         hosts = []
         for i, cache in enumerate(caches):
+            cache.tracer = self.tracer
+            cache.trace_host = i
             ex = _HostExecutor(
                 self.completion, cache, self.stats, depth=pipeline_depth,
                 faults=faults, straggler=self.monitor,
                 max_tile_retries=max_tile_retries,
                 retry_backoff_s=retry_backoff_s,
-                check_finite=check_finite, clock=clock)
+                check_finite=check_finite, clock=clock,
+                tracer=self.tracer)
             host = Host(i, cache, ex, mesh=mesh_list[i], devices=groups[i])
             ex.host = host
             ex.redispatch_hook = (lambda tile, h=host:
@@ -548,15 +564,26 @@ class ClusterEngine(RenderEngine):
             degrade_queue_tiles=degrade_queue_tiles,
             degrade_max_priority=degrade_max_priority,
             max_load_failures=max_load_failures,
-            tile_service_prior_s=tile_service_prior_s)
+            tile_service_prior_s=tile_service_prior_s,
+            tracer=self.tracer)
         self.scheduler.completion = self.completion
         self.scheduler.executor = hosts[0].executor
         self.completion.scheduler = self.scheduler
         # facade introspection (pipeline_depth property etc.) looks at
         # ONE executor; host 0 stands in — the throwaway is unreachable
         self.executor = hosts[0].executor
+        for h in hosts:
+            self._note_host_state(h)
 
     # ----------------------------------------------------- host events ----
+    def _note_host_state(self, host: Host) -> None:
+        """Mirror one host's lifecycle state into the labeled gauge
+        (value = index into HOST_STATES)."""
+        m = getattr(self.stats, "m", None)
+        if m is not None:
+            m.host_state.labels(host=host.id).set(
+                HOST_STATES.index(host.state))
+
     def schedule_host_events(self, events: List[HostEvent]) -> None:
         self._events.extend(events)
 
@@ -577,6 +604,8 @@ class ClusterEngine(RenderEngine):
             elif ev.kind == "slow":
                 host.slow_extra_s = ev.extra_s
                 self.stats["host_slow_events"] += 1
+                self.tracer.event("host.slow", cat="host", host=host.id,
+                                  extra_s=ev.extra_s)
             elif ev.kind == "drain":
                 self._drain_host(host)
             elif ev.kind == "rejoin":
@@ -584,6 +613,7 @@ class ClusterEngine(RenderEngine):
             elif ev.kind == "hang":
                 host.hung = True
                 host.hang_steps = 0
+                self.tracer.event("host.hang", cat="host", host=host.id)
 
     def _kill_host(self, host: Host) -> None:
         """A host dies NOW: abandon its in-flight slots (device arrays
@@ -596,9 +626,13 @@ class ClusterEngine(RenderEngine):
         host.state = "dead"
         host.hung = False
         now = self._clock()
-        for tile in host.executor.abandon_all():
+        abandoned = host.executor.abandon_all()
+        for tile in abandoned:
             self.scheduler.requeue(tile, now)
         self.stats["host_kills"] += 1
+        self.tracer.event("host.kill", cat="host", host=host.id,
+                          requeued=len(abandoned))
+        self._note_host_state(host)
         aff = self.scheduler._affinity
         for scene in [s for s, hid in aff.items() if hid == host.id]:
             del aff[scene]
@@ -612,6 +646,8 @@ class ClusterEngine(RenderEngine):
             return
         host.state = "draining"
         self.stats["host_drains"] += 1
+        self.tracer.event("host.drain", cat="host", host=host.id)
+        self._note_host_state(host)
         for scene in list(host.cache.resident_scenes):
             alt = self.scheduler._place(scene, exclude={host.id})
             if alt is not None:
@@ -626,6 +662,8 @@ class ClusterEngine(RenderEngine):
             host.hang_steps = 0
             host.beat(now)
             self.stats["host_rejoins"] += 1
+            self.tracer.event("host.rejoin", cat="host", host=host.id)
+            self._note_host_state(host)
 
     # ----------------------------------------------------------- health ----
     def _health_check(self, now: float) -> None:
@@ -645,21 +683,32 @@ class ClusterEngine(RenderEngine):
                 h.hang_steps += 1
                 if stale or h.hang_steps > self.hang_kill_steps:
                     self.stats["heartbeat_timeouts"] += 1
+                    self.tracer.event("host.heartbeat_timeout", cat="host",
+                                      host=h.id, hung=True)
                     self._kill_host(h)
                 continue
             if stale:
                 if now - h.last_beat > 2.0 * self.heartbeat_timeout_s:
                     self.stats["heartbeat_timeouts"] += 1
+                    self.tracer.event("host.heartbeat_timeout", cat="host",
+                                      host=h.id, hung=False)
                     self._kill_host(h)
                 elif h.state == "healthy":
                     h.state = "suspect"
+                    self.tracer.event("host.suspect", cat="host", host=h.id,
+                                      reason="stale_heartbeat")
+                    self._note_host_state(h)
                 continue
             if h.id in slow:
                 if h.state == "healthy":
                     h.state = "suspect"
                     self.stats["slow_host_flags"] += 1
+                    self.tracer.event("host.suspect", cat="host", host=h.id,
+                                      reason="slow")
+                    self._note_host_state(h)
             elif h.state == "suspect":
                 h.state = "healthy"
+                self._note_host_state(h)
 
     # --------------------------------------------------------- failover ----
     def _failover(self, failed_host: Host, tile: _Tile):
@@ -704,6 +753,9 @@ class ClusterEngine(RenderEngine):
         host.dispatches += 1
         host.beat(self._clock())
         self.stats["cross_host_redispatches"] += 1
+        self.tracer.event("tile.redispatch", cat="tile", tile=tile.tid,
+                          scene=tile.scene_id, from_host=failed_host.id,
+                          host=host.id)
         tile.prev_host = host.id
         return arr, cost
 
@@ -738,7 +790,9 @@ class ClusterEngine(RenderEngine):
                     a, "partial" if a.n_done > 0 else "rejected",
                     error="no alive hosts in the serving pool")
                 progressed = True
-            self.scheduler._requeue.clear()
+            while self.scheduler._requeue:
+                self.scheduler._drop_tile(self.scheduler._requeue.popleft(),
+                                          "no_alive_hosts")
             return progressed
         tile = self.scheduler.next_tile()
         if tile is not None:

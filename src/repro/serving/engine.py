@@ -89,6 +89,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data import rays as R
+from repro.obs.metrics import (MetricsRegistry, engine_stats_view)
+from repro.obs.trace import NULL_TRACER
 from repro.serving.faults import FaultPlan, InjectedDispatchError
 from repro.serving.scene_cache import SceneCache, SceneLoadError
 
@@ -155,7 +157,7 @@ class _Active:
                  "next_ray", "n_done", "n_rays", "submit_s",
                  "service_start_s", "deadline_abs", "terminal",
                  "degraded", "retries", "fallbacks",
-                 "dispatches_at_submit")
+                 "dispatches_at_submit", "trace_span")
 
     def __init__(self, req: RenderRequest, rid: int, seq: int, now: float):
         self.req, self.rid, self.seq, self.submit_s = req, rid, seq, now
@@ -177,6 +179,7 @@ class _Active:
         self.retries = 0
         self.fallbacks = 0
         self.dispatches_at_submit = 0   # priority-aging anchor
+        self.trace_span = None          # open request-lifecycle span
 
     @property
     def remaining(self) -> int:
@@ -202,6 +205,7 @@ class _Tile:
     degraded: bool = False                  # coarse-only program
     host_id: Optional[int] = None           # cluster placement
     prev_host: Optional[int] = None         # last host that dispatched it
+    tid: int = -1                           # deterministic trace id
 
 
 # ---------------------------------------------------------------------------
@@ -223,8 +227,10 @@ class TileScheduler:
                  degrade_queue_tiles: int = 8,
                  degrade_max_priority: int = 0,
                  max_load_failures: int = 3,
-                 tile_service_prior_s: Optional[float] = None):
+                 tile_service_prior_s: Optional[float] = None,
+                 tracer=None):
         self.cache = cache
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.tile_rays = int(tile_rays)
         # stickiness bound: after this many consecutive tiles for one
         # scene, the best-ranked request wins even at equal priority —
@@ -243,6 +249,7 @@ class TileScheduler:
         self.tile_service_prior_s = tile_service_prior_s
         self.queue: List[_Active] = []
         self._seq = 0
+        self._tile_seq = 0           # deterministic per-engine tile ids
         self._current_scene: Optional[str] = None
         self._sticky_run = 0         # consecutive tiles for current scene
         self._home_cells: Dict[str, int] = {}   # scene -> routed cell
@@ -280,6 +287,13 @@ class TileScheduler:
         self._seq += 1
         a = _Active(req, rid, rid, self._clock())
         a.dispatches_at_submit = self.stats["dispatches"]
+        tr = self.tracer
+        if tr.enabled and tr.sampled_request(rid):
+            a.trace_span = tr.begin("request", cat="request", request=rid,
+                                    scene=req.scene_id, hw=req.hw,
+                                    priority=req.priority)
+            tr.event("request.submit", cat="request", request=rid,
+                     scene=req.scene_id)
         if req.deadline_s is not None:
             self._deadlines_armed = True
         reason = None
@@ -293,9 +307,19 @@ class TileScheduler:
                 reason = (f"admission control: predicted queueing delay "
                           f"{est:.4f}s exceeds deadline {req.deadline_s}s")
         if reason is not None:
+            if a.trace_span is not None:
+                tr.event("request.reject", cat="request", request=rid,
+                         reason=reason)
             self.completion.terminate(a, "rejected", error=reason)
             return rid
+        if a.trace_span is not None:
+            tr.event("request.admit", cat="request", request=rid,
+                     queue_depth=len(self.queue))
         self.queue.append(a)
+        m = getattr(self.stats, "m", None)
+        if m is not None:
+            m.queue_depth.set(len(self.queue))
+            m.queue_depth_hist.observe(len(self.queue))
         self.stats["dispatch_baseline"] += -(-a.n_rays // self.tile_rays)
         return rid
 
@@ -435,6 +459,7 @@ class TileScheduler:
         """Coalesce ONE tile from the best loadable scene's pending
         requests in queue order (scene + residency resolution in
         ``_resolve_scene``); ``None`` when nothing is schedulable."""
+        t_coalesce0 = self._clock()
         resolved = self._resolve_scene()
         if resolved is None:
             return None
@@ -473,10 +498,21 @@ class TileScheduler:
             chunks_o.append(np.repeat(chunks_o[-1][-1:], pad, axis=0))
             chunks_d.append(np.repeat(chunks_d[-1][-1:], pad, axis=0))
             self.stats["padded_rays"] += pad
-        return _Tile(scene, pp, spans, np.concatenate(chunks_o),
+        tid = self._tile_seq
+        self._tile_seq += 1
+        tile = _Tile(scene, pp, spans, np.concatenate(chunks_o),
                      np.concatenate(chunks_d), n,
                      home_cell=self._route(scene, pp), degraded=degraded,
-                     host_id=host_id)
+                     host_id=host_id, tid=tid)
+        tr = self.tracer
+        if tr.enabled:
+            tr.complete("tile.coalesce", t_coalesce0, cat="tile", tile=tid,
+                        scene=scene, rays=n, pad=pad, requests=len(spans),
+                        host=host_id, degraded=degraded)
+        m = getattr(self.stats, "m", None)
+        if m is not None:
+            m.coalesce_seconds.observe(self._clock() - t_coalesce0)
+        return tile
 
 
 # ---------------------------------------------------------------------------
@@ -507,12 +543,13 @@ class TileExecutor:
                  retry_backoff_s: float = 0.0,
                  max_retry_backoff_s: float = 0.05,
                  check_finite: bool = True, clock=time.perf_counter,
-                 redispatch_hook=None):
+                 sleep=time.sleep, redispatch_hook=None, tracer=None):
         if depth < 1:
             raise ValueError(f"pipeline depth must be >= 1, got {depth}")
         self.completion = completion
         self.cache = cache
         self.stats = stats
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.depth = int(depth)
         self.faults = faults
         self.straggler = straggler
@@ -526,7 +563,8 @@ class TileExecutor:
         self.max_retry_backoff_s = float(max_retry_backoff_s)
         self.check_finite = bool(check_finite)
         self._clock = clock
-        self._slots: deque = deque()    # (tile, device rgb, t0, extra_s)
+        self._sleep = sleep             # injectable alongside the clock
+        self._slots: deque = deque()    # (tile, rgb, t0, extra_s, span)
 
     @property
     def in_flight(self) -> int:
@@ -542,9 +580,13 @@ class TileExecutor:
         if fault is not None and fault["kind"] == "dispatch_error":
             raise InjectedDispatchError(
                 f"injected dispatch failure (tile scene={tile.scene_id})")
+        tr = self.tracer
         rgb, cost = tile.pp.dispatch_tile(
             jnp.asarray(tile.rays_o), jnp.asarray(tile.rays_d),
-            home_cell=tile.home_cell, coarse_only=tile.degraded)
+            home_cell=tile.home_cell, coarse_only=tile.degraded,
+            tracer=tr if tr.enabled else None,
+            trace_attrs={"tile": tile.tid, "host": tile.host_id,
+                         "scene": tile.scene_id} if tr.enabled else None)
         extra = (fault["extra_s"]
                  if fault is not None and fault["kind"] == "straggle"
                  else 0.0)
@@ -573,6 +615,7 @@ class TileExecutor:
         attempts are accounted per tile and per touched request, the
         oracle rung as ``oracle_fallbacks``."""
         st = self.stats
+        tr = self.tracer
         if self.redispatch_hook is not None:
             # cross-host failover outranks the local ladder: a tile that
             # failed on THIS host is redispatched to a different healthy
@@ -585,9 +628,12 @@ class TileExecutor:
         for attempt in range(self.max_tile_retries):
             st["tile_retries"] += 1
             self._bump_retries(tile)
+            if tr.enabled:
+                tr.event("tile.retry", cat="tile", tile=tile.tid,
+                         host=tile.host_id, attempt=attempt + 1)
             if self.retry_backoff_s > 0.0:
-                time.sleep(min(self.retry_backoff_s * (2 ** attempt),
-                               self.max_retry_backoff_s))
+                self._sleep(min(self.retry_backoff_s * (2 ** attempt),
+                                self.max_retry_backoff_s))
             try:
                 rgb, cost, _ = self._attempt(tile, allow_straggle=False)
             except Exception:
@@ -602,6 +648,9 @@ class TileExecutor:
                 return arr, cost
             st["corrupt_tiles"] += 1
         st["oracle_fallbacks"] += 1
+        if tr.enabled:
+            tr.event("tile.fallback", cat="tile", tile=tile.tid,
+                     host=tile.host_id)
         for a, _, _ in tile.spans:
             if not a.terminal:
                 a.fallbacks += 1
@@ -627,6 +676,9 @@ class TileExecutor:
         prev = self.stats.get("tile_service_s_ewma")
         self.stats["tile_service_s_ewma"] = (
             dt if not prev else 0.7 * prev + 0.3 * dt)
+        m = getattr(self.stats, "m", None)
+        if m is not None:
+            m.service_seconds.observe(dt)
 
     # ----------------------------------------------------------- public ----
     def dispatch(self, tile: _Tile) -> None:
@@ -637,19 +689,34 @@ class TileExecutor:
         retry ladder (it never occupies a slot) — this method does not
         raise for handled fault classes."""
         self.cache.pin(tile.scene_id)
+        tr = self.tracer
+        if tr.enabled:
+            tr.event("tile.dispatch", cat="tile", tile=tile.tid,
+                     scene=tile.scene_id, host=tile.host_id,
+                     slot=len(self._slots), degraded=tile.degraded,
+                     home_cell=tile.home_cell)
         try:
             rgb, cost, extra = self._attempt(tile)
-        except Exception:
+        except Exception as e:
             self.stats["dispatch_errors"] += 1
+            if tr.enabled:
+                tr.event("tile.dispatch_error", cat="tile", tile=tile.tid,
+                         host=tile.host_id, error=str(e)[:120])
             arr, cost = self._resolve_sync(tile)
             self._account(tile, cost)
             self.completion.scatter(tile, arr)
             self.cache.unpin(tile.scene_id)
             return
-        self._slots.append((tile, rgb, self._clock(), extra))
+        sp = (tr.begin("tile.device_compute", cat="tile", tile=tile.tid,
+                       host=tile.host_id, slot=len(self._slots))
+              if tr.enabled else None)
+        self._slots.append((tile, rgb, self._clock(), extra, sp))
         self._account(tile, cost)
         self.stats["max_in_flight"] = max(self.stats["max_in_flight"],
                                           len(self._slots))
+        m = getattr(self.stats, "m", None)
+        if m is not None:
+            m.in_flight_tiles.set(len(self._slots))
         while len(self._slots) >= self.depth:
             self.drain_one()
 
@@ -659,8 +726,13 @@ class TileExecutor:
         it, release its scene pin. Never raises for handled faults."""
         if not self._slots:
             return False
-        tile, rgb, t0, extra = self._slots.popleft()
+        tile, rgb, t0, extra, sp = self._slots.popleft()
         arr = np.asarray(rgb)
+        tr = self.tracer
+        tr.end(sp)
+        if tr.enabled:
+            tr.event("tile.drain", cat="tile", tile=tile.tid,
+                     host=tile.host_id)
         if self.faults is not None:
             bad = self.faults.corrupt_tile(arr)
             if bad is not None:
@@ -676,18 +748,29 @@ class TileExecutor:
                 self._clock() - t0 + extra)
             if verdict["deadline_exceeded"]:
                 self.stats["straggler_redispatches"] += 1
+                if tr.enabled:
+                    tr.event("tile.straggler_redispatch", cat="tile",
+                             tile=tile.tid, host=tile.host_id)
                 arr, _ = self._resolve_sync(tile)
                 redispatched = True
             elif extra > 0.0:
-                time.sleep(extra)     # the monitor missed it: pay the stall
+                self._sleep(extra)    # the monitor missed it: pay the stall
                 self.stats["straggle_wait_s"] += extra
         elif extra > 0.0:
-            time.sleep(extra)
+            self._sleep(extra)
             self.stats["straggle_wait_s"] += extra
         if not redispatched and not self._is_finite(arr, tile):
             self.stats["corrupt_tiles"] += 1
+            if tr.enabled:
+                tr.event("tile.corrupt", cat="tile", tile=tile.tid,
+                         host=tile.host_id)
             arr, _ = self._resolve_sync(tile)
-        self._update_service_ewma(self._clock() - t0)
+        dt = self._clock() - t0
+        m = getattr(self.stats, "m", None)
+        if m is not None:
+            m.inflight_seconds.observe(dt)
+            m.in_flight_tiles.set(len(self._slots))
+        self._update_service_ewma(dt)
         self.completion.scatter(tile, arr)
         self.cache.unpin(tile.scene_id)
         return True
@@ -705,8 +788,13 @@ class TileExecutor:
         not rewinding the requests — is what keeps every submit answered
         exactly once."""
         tiles = []
+        tr = self.tracer
         while self._slots:
-            tile, _rgb, _t0, _extra = self._slots.popleft()
+            tile, _rgb, _t0, _extra, sp = self._slots.popleft()
+            tr.end(sp, abandoned=True)
+            if tr.enabled:
+                tr.event("tile.abandon", cat="tile", tile=tile.tid,
+                         host=tile.host_id)
             self.cache.unpin(tile.scene_id)
             tiles.append(tile)
         return tiles
@@ -721,21 +809,25 @@ class CompletionSink:
     ``expired``) or was refused (``rejected``)."""
 
     def __init__(self, scheduler: TileScheduler, stats: dict, clock,
-                 check_finite: bool = True):
+                 check_finite: bool = True, tracer=None):
         self.scheduler = scheduler
         self.stats = stats
         self._clock = clock
         self.check_finite = bool(check_finite)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.completed: Dict[int, RenderResult] = {}
         self.completion_order: List[int] = []
 
     def scatter(self, tile: _Tile, rgb: np.ndarray) -> None:
+        t0 = self._clock()
         off = 0
+        late = 0
         for a, start, take in tile.spans:
             if a.terminal:
                 # request already reached a terminal status (expired /
                 # rejected mid-flight): its late pixels drop harmlessly
                 self.stats["late_rays"] += take
+                late += take
                 off += take
                 continue
             a.fb[start:start + take] = rgb[off:off + take]
@@ -743,6 +835,13 @@ class CompletionSink:
             off += take
             if a.n_done == a.n_rays:
                 self._complete(a)
+        tr = self.tracer
+        if tr.enabled:
+            tr.complete("tile.scatter", t0, cat="tile", tile=tile.tid,
+                        scene=tile.scene_id, host=tile.host_id, late=late)
+        m = getattr(self.stats, "m", None)
+        if m is not None:
+            m.scatter_seconds.observe(self._clock() - t0)
 
     def _finish(self, a: _Active, status: str,
                 error: Optional[str] = None) -> None:
@@ -765,6 +864,18 @@ class CompletionSink:
         self.stats["requests_completed"] += 1
         counts = self.stats["status_counts"]
         counts[status] = counts.get(status, 0) + 1
+        sp = a.trace_span
+        if sp is not None:
+            a.trace_span = None
+            tr = self.tracer
+            tr.event("request.complete", cat="request", request=a.rid,
+                     status=status)
+            tr.end(sp, status=status)
+        m = getattr(self.stats, "m", None)
+        if m is not None:
+            m.queue_depth.set(len(self.scheduler.queue))
+            if res.delivered:
+                m.request_latency_seconds.observe(res.latency_s)
 
     def _complete(self, a: _Active) -> None:
         if self.check_finite and not np.isfinite(a.fb).all():
@@ -834,36 +945,21 @@ class RenderEngine:
                  straggler_mitigation: Optional[bool] = None,
                  straggler_cfg=None,
                  check_finite: bool = True,
-                 tile_service_prior_s: Optional[float] = None):
+                 tile_service_prior_s: Optional[float] = None,
+                 tracer=None, registry=None):
         self.cache = cache
         self.faults = faults
         self._clock = clock
-        self.stats = {
-            "dispatches": 0,            # tiles actually issued
-            "dispatch_baseline": 0,     # sum ceil(n_rays/tile) per request
-            "rays_rendered": 0,         # real rays dispatched
-            "padded_rays": 0,           # tail-tile filler rays
-            "scene_switches": 0,        # resident-weight changes
-            "requests_completed": 0,    # requests in ANY terminal status
-            "status_counts": {},        # terminal status -> count
-            "plcore_gather_count": 0,   # owner-map remote layer fetches
-            "plcore_gather_bytes": 0,   # ... and their bytes
-            "routed_tiles": 0,          # tiles with a home cell assigned
-            "max_in_flight": 0,         # peak executor slot occupancy
-            # ---- fault accounting -----------------------------------
-            "dispatch_errors": 0,       # dispatch attempts that raised
-            "corrupt_tiles": 0,         # drains with non-finite real rays
-            "tile_retries": 0,          # retry-ladder attempts
-            "oracle_fallbacks": 0,      # tiles resolved by the oracle rung
-            "scene_load_errors": 0,     # real loader failures seen
-            "scene_load_fail_fasts": 0, # backoff short-circuits seen
-            "straggler_redispatches": 0,
-            "straggle_wait_s": 0.0,     # injected stalls actually paid
-            "degraded_requests": 0,     # overload-degraded requests
-            "degraded_tiles": 0,        # coarse-only tiles dispatched
-            "late_rays": 0,             # scatters onto terminal requests
-            "tile_service_s_ewma": None,  # admission-control estimator
-        }
+        # observability: a per-engine registry backs the stats dict (the
+        # keys, order and value types come from ENGINE_STATS_SCHEMA —
+        # the old literal dict, now registry-derived so a counter can't
+        # be read before initialization), and the tracer records the
+        # request/tile lifecycle; NULL_TRACER no-ops when tracing is off
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.stats = engine_stats_view(self.registry)
+        cache.tracer = self.tracer
         self.scheduler = TileScheduler(
             cache, tile_rays=tile_rays, max_sticky_tiles=max_sticky_tiles,
             route_by_shard=route_by_shard, stats=self.stats, clock=clock,
@@ -872,9 +968,10 @@ class RenderEngine:
             degrade_queue_tiles=degrade_queue_tiles,
             degrade_max_priority=degrade_max_priority,
             max_load_failures=max_load_failures,
-            tile_service_prior_s=tile_service_prior_s)
+            tile_service_prior_s=tile_service_prior_s, tracer=self.tracer)
         self.completion = CompletionSink(self.scheduler, self.stats, clock,
-                                         check_finite=check_finite)
+                                         check_finite=check_finite,
+                                         tracer=self.tracer)
         if straggler_mitigation is None:
             straggler_mitigation = faults is not None
         monitor = None
@@ -890,7 +987,7 @@ class RenderEngine:
             faults=faults, straggler=monitor,
             max_tile_retries=max_tile_retries,
             retry_backoff_s=retry_backoff_s,
-            check_finite=check_finite, clock=clock)
+            check_finite=check_finite, clock=clock, tracer=self.tracer)
         # admission control needs the in-flight count; termination needs
         # the sink — wire the cross-layer references the façade owns
         self.scheduler.completion = self.completion

@@ -151,6 +151,11 @@ def _report(engine: RenderEngine, latencies_s: List[float],
     }
     if hasattr(engine, "cluster_stats"):
         out["cluster"] = engine.cluster_stats()
+    tracer = getattr(engine, "tracer", None)
+    if tracer is not None and tracer.enabled:
+        # tracing-armed runs only: the block's absence keeps untraced
+        # reports byte-identical to the pre-observability format
+        out["observability"] = tracer.summary()
     return out
 
 
@@ -160,13 +165,15 @@ def _delivered(results: List[RenderResult]) -> List[RenderResult]:
     return [r for r in results if r.delivered]
 
 
-def run_open_loop(engine: RenderEngine, trace: List[TraceItem]) -> dict:
+def run_open_loop(engine: RenderEngine, trace: List[TraceItem], *,
+                  clock=time.perf_counter, sleep=time.sleep) -> dict:
     """Wall-clock open loop: each request is submitted once its arrival
     time has passed; latency = completion - *arrival* (queueing delay
     included), split as queueing = first-ray-tiled - arrival and
     service = completion - first-ray-tiled. Idles sleep until the next
-    arrival."""
-    clock = time.perf_counter
+    arrival. ``clock``/``sleep`` are injectable (fake-clock tests, and
+    the single-timebase rule: a traced run should read the SAME clock
+    the engine and tracer do)."""
     t0 = clock()
     arrivals = {}           # rid -> absolute arrival time
     i = 0
@@ -177,8 +184,8 @@ def run_open_loop(engine: RenderEngine, trace: List[TraceItem]) -> dict:
             arrivals[rid] = t0 + trace[i].arrival_s
             i += 1
         if not engine.step() and i < len(trace):
-            time.sleep(max(0.0, min(trace[i].arrival_s - (clock() - t0),
-                                    0.05)))
+            sleep(max(0.0, min(trace[i].arrival_s - (clock() - t0),
+                               0.05)))
     wall = clock() - t0
     done = [(engine.completed[rid], t_arr)
             for rid, t_arr in arrivals.items() if rid in engine.completed]
@@ -190,20 +197,21 @@ def run_open_loop(engine: RenderEngine, trace: List[TraceItem]) -> dict:
 
 
 def run_closed_loop(engine: RenderEngine, trace: List[TraceItem],
-                    concurrency: int = 4) -> dict:
+                    concurrency: int = 4, *,
+                    clock=time.perf_counter) -> dict:
     """Closed loop at fixed concurrency: arrival times ignored, the next
     trace request enters as one in flight completes; latency =
     completion - submit, split at the first-ray-tiled timestamp.
     Deterministic given a deterministic clockless engine path (the
-    CI/bench mode)."""
-    t0 = time.perf_counter()
+    CI/bench mode). ``clock`` is injectable (single-timebase rule)."""
+    t0 = clock()
     i, done0 = 0, len(engine.completion_order)
     while i < len(trace) or engine.pending:
         while i < len(trace) and engine.pending < concurrency:
             engine.submit(trace[i].request)
             i += 1
         engine.step()
-    wall = time.perf_counter() - t0
+    wall = clock() - t0
     done = _delivered([engine.completed[rid]
                        for rid in engine.completion_order[done0:]])
     return _report(engine, [r.latency_s for r in done], wall, "closed",
@@ -213,7 +221,8 @@ def run_closed_loop(engine: RenderEngine, trace: List[TraceItem],
 
 def run_trace(engine: RenderEngine, trace: List[TraceItem], *,
               mode: str = "open", concurrency: int = 4,
-              host_events: Optional[List[HostEvent]] = None) -> dict:
+              host_events: Optional[List[HostEvent]] = None,
+              clock=time.perf_counter, sleep=time.sleep) -> dict:
     """Drive one trace. ``host_events`` arms the multi-host overload
     mode: kill/slow/drain/rejoin schedules applied by the engine's step
     loop at their trace-time offsets (or dispatch counts). Only a
@@ -225,7 +234,7 @@ def run_trace(engine: RenderEngine, trace: List[TraceItem], *,
                              "(single-host engines have no hosts to kill)")
         engine.schedule_host_events(list(host_events))
     if mode == "open":
-        return run_open_loop(engine, trace)
+        return run_open_loop(engine, trace, clock=clock, sleep=sleep)
     if mode == "closed":
-        return run_closed_loop(engine, trace, concurrency)
+        return run_closed_loop(engine, trace, concurrency, clock=clock)
     raise ValueError(f"unknown loadgen mode: {mode!r}")

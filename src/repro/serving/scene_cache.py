@@ -33,6 +33,7 @@ from typing import Callable, Dict, Tuple
 import jax
 
 from repro.core.pipeline import PackedPlcore
+from repro.obs.trace import NULL_TRACER
 
 
 class SceneLoadError(RuntimeError):
@@ -89,6 +90,13 @@ class SceneCache:
     ``max_fail_backoff``; the first post-backoff ``get`` retries the
     loader for real, and a success clears the failure state."""
 
+    #: Observability hooks, wired (as instance attrs) by the owning
+    #: engine: ``tracer`` records cache.* residency events, ``trace_host``
+    #: tags them with the owning cluster host. Class-level defaults keep
+    #: a bare SceneCache (tests, tools) tracing-free with zero setup.
+    tracer = NULL_TRACER
+    trace_host = None
+
     def __init__(self, loader: Callable[[str], PackedPlcore],
                  capacity_mb: float = 256.0, *, fail_backoff: int = 4,
                  max_fail_backoff: int = 64):
@@ -128,6 +136,10 @@ class SceneCache:
         at tile dispatch and unpins when the tile's scatter drains, so a
         resident can never be evicted under an in-flight dispatch)."""
         self._pins[scene_id] = self._pins.get(scene_id, 0) + 1
+        if self.tracer.enabled:
+            self.tracer.event("cache.pin", cat="cache", scene=scene_id,
+                              host=self.trace_host,
+                              refs=self._pins[scene_id])
 
     def unpin(self, scene_id: str) -> None:
         n = self._pins.get(scene_id, 0) - 1
@@ -135,6 +147,9 @@ class SceneCache:
             self._pins.pop(scene_id, None)
         else:
             self._pins[scene_id] = n
+        if self.tracer.enabled:
+            self.tracer.event("cache.unpin", cat="cache", scene=scene_id,
+                              host=self.trace_host, refs=max(0, n))
 
     def pinned(self, scene_id: str) -> bool:
         return scene_id in self._pins
@@ -149,6 +164,8 @@ class SceneCache:
             return False
         del self._entries[scene_id]
         self.evictions += 1
+        self.tracer.event("cache.evict", cat="cache", scene=scene_id,
+                          host=self.trace_host, reason="discard")
         return True
 
     def failing_scenes(self) -> list:
@@ -164,20 +181,30 @@ class SceneCache:
         never eviction victims — a cache whose unpinned residents don't
         cover the overflow stays over capacity until pins drain (the
         counters show it)."""
+        tr = self.tracer
         ent = self._entries.get(scene_id)
         if ent is not None:
             self.hits += 1
             self._entries.move_to_end(scene_id)
+            if tr.enabled:
+                tr.event("cache.hit", cat="cache", scene=scene_id,
+                         host=self.trace_host)
             return ent[0]
         fail = self._failed.get(scene_id)
         if fail is not None and fail[1] > 0:
             fail[1] -= 1
             self.fail_fasts += 1
+            if tr.enabled:
+                tr.event("cache.load_backoff", cat="cache", scene=scene_id,
+                         host=self.trace_host, failures=fail[0],
+                         credits_left=fail[1])
             raise SceneLoadError(
                 f"scene {scene_id!r} is in load-failure backoff "
                 f"({fail[0]} consecutive failures; retry in {fail[1] + 1} "
                 f"more attempts)", fail_fast=True)
         self.misses += 1
+        sp = tr.begin("cache.load", cat="cache", scene=scene_id,
+                      host=self.trace_host) if tr.enabled else None
         try:
             pp = self._loader(scene_id)
             nbytes = plcore_nbytes(pp)
@@ -191,8 +218,10 @@ class SceneCache:
             self._failed[scene_id] = [
                 n_fail, min(self.fail_backoff * (2 ** (n_fail - 1)),
                             self.max_fail_backoff)]
+            tr.end(sp, ok=False, error=str(e)[:120])
             raise SceneLoadError(
                 f"loader failed for scene {scene_id!r}: {e}") from e
+        tr.end(sp, ok=True, bytes=nbytes)
         self._failed.pop(scene_id, None)
         self._entries[scene_id] = (pp, nbytes)
         for victim in list(self._entries):   # LRU -> MRU order
@@ -203,6 +232,9 @@ class SceneCache:
                 continue
             del self._entries[victim]
             self.evictions += 1
+            if tr.enabled:
+                tr.event("cache.evict", cat="cache", scene=victim,
+                         host=self.trace_host, reason="capacity")
         return pp
 
     def stats(self) -> dict:
