@@ -24,6 +24,12 @@ Two more interleaved passes cover the scheduler/executor split:
   engine's owner-map gather accounting (``plcore_gather_count`` /
   ``_bytes``) — the cross-device weight-traffic quantity routing
   shrinks.
+* ``percell``: the routed trace again with ``percell_dispatch=True`` —
+  each tile runs a program compiled for its home cell's devices only,
+  remote layers staged into the cell ONCE per (scene, cell) instead of
+  gathered per dispatch. Reports the per-cell dispatch/concurrency
+  split, the one-time stage cost next to the per-dispatch gather cost
+  it replaces, and req/s vs the SPMD routed engine on the same trace.
 
 A fourth pass covers the fault-tolerance layer:
 
@@ -123,6 +129,7 @@ def run() -> dict:
     # contention bursts as signal; interleaving + min compares the
     # engine variants and the sequential baseline on equal footing
     reps, reps_pl, reps_sh, reps_sh_rt, seq_walls = [], [], [], [], []
+    reps_pc = []
     for _ in range(2):
         engine = RenderEngine(cache, tile_rays=tile_rays)
         reps.append(loadgen.run_trace(engine, trace, mode="closed",
@@ -151,10 +158,22 @@ def run() -> dict:
                                     route_by_shard=True)
         reps_sh_rt.append(loadgen.run_trace(engine_sh_rt, trace,
                                             mode="closed", concurrency=4))
+        # per-cell dispatch: same routed trace, each tile compiled for
+        # its home cell only. Stage counters are per-engine but the
+        # (scene, cell) views cache on the resident PackedPlcore, so the
+        # FIRST round's engine pays (and reports) the one-time staging
+        engine_pc = RenderEngine(cache_sh, tile_rays=tile_rays,
+                                 pipeline_depth=depth,
+                                 route_by_shard=True,
+                                 percell_dispatch=True)
+        reps_pc.append((loadgen.run_trace(engine_pc, trace, mode="closed",
+                                          concurrency=4), engine_pc))
     rep = min(reps, key=lambda r: r["wall_s"])
     rep_pl = min(reps_pl, key=lambda r: r["wall_s"])
     rep_sh = min(reps_sh, key=lambda r: r["wall_s"])
     rep_sh_rt = min(reps_sh_rt, key=lambda r: r["wall_s"])
+    rep_pc = min((r for r, _ in reps_pc), key=lambda r: r["wall_s"])
+    pc_report = reps_pc[0][1].percell_report() or {}
     seq_wall = min(seq_walls)
 
     # robustness pass: same trace, canonical chaos plan, COLD wrapped
@@ -283,6 +302,27 @@ def run() -> dict:
                 2 * kops.plcore_resident_weight_bytes(cfg, 1)
                 / (1 << 20), 4),
         },
+        # per-cell dispatch vs the SPMD routed engine on the same trace:
+        # per-cell concurrency split + the once-per-(scene, cell) stage
+        # cost next to the per-dispatch gather cost it replaces
+        "percell": {
+            "req_per_s": rep_pc["req_per_s"],
+            "req_per_s_spmd_routed": rep_sh_rt["req_per_s"],
+            "cells": pc_report.get("cells", {}),
+            "cells_active": pc_report.get("cells_active", 0),
+            "percell_tiles": pc_report.get("percell_tiles", 0),
+            "stage_events": pc_report.get("stage_events", 0),
+            "stage_layers": pc_report.get("stage_layers", 0),
+            "stage_mb": round(pc_report.get("stage_bytes", 0) / (1 << 20),
+                              3),
+            # per-dispatch remote-layer traffic under percell (cells
+            # execute from staged local copies — must be 0) vs what the
+            # SPMD routed engine gathers every dispatch
+            "gather_layers_per_dispatch":
+                rep_pc["engine"]["plcore_gather_count"],
+            "gather_layers_spmd_routed":
+                rep_sh_rt["engine"]["plcore_gather_count"],
+        },
         # the fault-tolerance surface under the canonical chaos plan:
         # goodput + status counts + the recovery-ladder accounting
         # (RenderEngine.robustness schema, see docs/benchmarks.md)
@@ -358,6 +398,12 @@ def run() -> dict:
          f"_vs_unrouted_{out['sharding']['gather_layers_unrouted']}")
     emit("serving/speedup_vs_sequential", 0.0,
          f"x{out['speedup_engine_vs_sequential']}")
+    pc = out["percell"]
+    emit("serving/percell_req_per_s", 0.0,
+         f"req_per_s={pc['req_per_s']}_cells={pc['cells_active']}"
+         f"_stage_layers={pc['stage_layers']}"
+         f"_gathers={pc['gather_layers_per_dispatch']}"
+         f"_vs_spmd_{pc['gather_layers_spmd_routed']}")
     rb = out["robustness"]
     emit("serving/chaos_goodput", 0.0,
          f"goodput={rb['goodput']}_retries={rb['tile_retries']}"

@@ -159,7 +159,7 @@ def _ray_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
 
 def _tile_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
              fuse_two_pass: bool = False, shard_mesh=None,
-             coarse_only: bool = False):
+             coarse_only: bool = False, cell: Optional[int] = None):
     """Tile-stream program: ONE pre-coalesced fixed-shape ray tile ->
     pixel colors. This is the serving-engine entry point — the engine
     coalesces rays from many concurrent requests into a tile, dispatches
@@ -179,9 +179,17 @@ def _tile_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
     coarse sampling + the coarse MLP + VRU only — no importance
     resample, no fine pass — at roughly ``n_coarse / (2*n_coarse +
     n_fine)`` of the full sample budget. Per-ray independent like the
-    full body, so degraded coalescing is equally partition-invariant."""
+    full body, so degraded coalescing is equally partition-invariant.
+
+    ``cell`` names the home mesh cell a PER-CELL program compiles for
+    (always with ``shard_mesh=None`` — the staged view is fully resident
+    on that cell, so the program has no collectives). The cell is part of
+    the cache key: each cell's program is its own compiled artifact
+    pinned to that cell's device, which is exactly what lets two cells
+    execute different scenes' tiles concurrently instead of serializing
+    the whole mesh over one SPMD tile stream."""
     key = (cfg, use_kernel, float(ert_eps), fuse_two_pass, shard_mesh,
-           coarse_only)
+           coarse_only, cell)
     fn = _TILE_JITS.get(key)
     if fn is None:
         if coarse_only:
@@ -261,6 +269,7 @@ class PackedPlcore:
         self.ert_eps = cfg.ert_eps if ert_eps is None else float(ert_eps)
         self.shard_mesh = shard_mesh
         self._gather_costs: dict = {}   # home_cell -> tile_gather_cost
+        self._cell_views: dict = {}     # cell -> staged per-cell view
         self.packed = None
         if use_kernel or shard_mesh is not None:
             from repro.kernels import ops as kops
@@ -383,10 +392,98 @@ class PackedPlcore:
             self._gather_costs[key] = cost
         return dict(cost)
 
+    def cell_stage_cost(self, cell: int) -> dict:
+        """One-time cost of staging this scene's weights fully resident
+        on mesh cell ``cell``: the trunk layers the cell does NOT own
+        locally — numerically the same layers/bytes ``tile_gather_cost``
+        prices PER DISPATCH on the SPMD path, paid here ONCE per
+        (scene, cell). That is the per-cell refactor's traffic win:
+        k dispatches cost ``stage`` instead of ``k × gather``."""
+        return self.tile_gather_cost(cell)
+
+    def staged_cells(self):
+        """Cells holding a staged per-cell view of this scene."""
+        return sorted(self._cell_views)
+
+    def cell_view(self, cell: int, tracer=None) -> dict:
+        """The staged per-cell execution view for mesh cell ``cell``:
+        ``{"params", "quant", "packed"}`` with EVERY array resident on
+        that cell's device (``runtime.sharding
+        .stage_plcore_packed_to_cell`` performs — and accounts — the
+        one-time cross-device fetch of the layers the cell does not
+        own). Built lazily, cached per cell, traced as a
+        ``plcore.stage`` span. device_put is placement only, so tiles
+        rendered through the view are bit-identical to the SPMD path.
+        For the XLA (non-kernel) path the raw per-layer trunk params are
+        rebuilt host-side from the staged stacks
+        (``kernels.ops.unstack_trunk_params`` — lossless), since the
+        per-cell program runs without a mesh and cannot re-gather."""
+        if self.shard_mesh is None:
+            raise ValueError("per-cell views need shard_mesh residency")
+        view = self._cell_views.get(int(cell))
+        if view is not None:
+            return view
+        if tracer is not None:
+            t0 = tracer.clock()
+        from repro.kernels import ops as kops
+        from repro.runtime import sharding as rsh
+        cell = int(cell)
+        dev = list(self.shard_mesh.devices.flat)[cell]
+        staged = {net: rsh.stage_plcore_packed_to_cell(
+            p, self.shard_mesh, cell) for net, p in self.packed.items()}
+        params = {net: jax.device_put(p, dev)
+                  for net, p in self.params.items()}
+        quant = None if self.quant is None else {
+            net: jax.device_put(q, dev) for net, q in self.quant.items()}
+        if self.use_kernel:
+            packed = staged
+        else:
+            # staged holds trunk stacks only (see __init__) — rebuild the
+            # raw per-layer trunk params/quant the XLA body consumes;
+            # eager ops on cell-committed arrays stay on the cell
+            packed = None
+            new_p, new_q = {}, None if quant is None else {}
+            for net, g in staged.items():
+                trunk_p, trunk_q = kops.unstack_trunk_params(self.cfg, g)
+                new_p[net] = {**params[net], "trunk": trunk_p}
+                if new_q is not None:
+                    new_q[net] = {**quant[net], "trunk": trunk_q}
+            params, quant = new_p, new_q
+        view = {"params": params, "quant": quant, "packed": packed}
+        jax.block_until_ready(view)
+        self._cell_views[cell] = view
+        if tracer is not None:
+            cost = self.cell_stage_cost(cell)
+            tracer.complete("plcore.stage", t0, cat="plcore", cell=cell,
+                            stage_layers=cost["layers"],
+                            stage_bytes=cost["bytes"])
+        return view
+
+    def render_tile_cell(self, o_tile, d_tile, cell: int,
+                         ert_eps: Optional[float] = None,
+                         coarse_only: bool = False,
+                         tracer=None) -> jnp.ndarray:
+        """``render_tile`` through the PER-CELL program: the tile's rays
+        are placed on cell ``cell``'s device and rendered by a program
+        compiled for that device only, against the staged ``cell_view``
+        — zero in-program collectives, the whole dispatch local to the
+        home cell. Bit-identical to ``render_tile`` (placement only)."""
+        cell = int(cell)
+        view = self.cell_view(cell, tracer=tracer)
+        eps = self.ert_eps if ert_eps is None else float(ert_eps)
+        fn = _tile_fn(self.cfg, self.use_kernel, eps, self.fuse_two_pass,
+                      None, coarse_only, cell=cell)
+        dev = list(self.shard_mesh.devices.flat)[cell]
+        o_tile = jax.device_put(o_tile, dev)
+        d_tile = jax.device_put(d_tile, dev)
+        return fn(view["params"], view["quant"], view["packed"],
+                  o_tile, d_tile)
+
     def dispatch_tile(self, o_tile, d_tile, *,
                       home_cell: Optional[int] = None,
                       ert_eps: Optional[float] = None,
                       coarse_only: bool = False,
+                      percell: bool = False,
                       tracer=None, trace_attrs=None):
         """The pipelined executor's entry point: dispatch ONE coalesced
         ray tile and return ``(rgb, gather_cost)`` — ``rgb`` an
@@ -401,16 +498,39 @@ class PackedPlcore:
         next to the 3x sample saving). ``tracer``/``trace_attrs`` record
         the host-side enqueue as a ``plcore.dispatch`` span — it covers
         program enqueue only, not device compute (which the executor's
-        ``tile.device_compute`` span measures at the drain)."""
+        ``tile.device_compute`` span measures at the drain).
+
+        ``percell=True`` (with a routed ``home_cell`` and sharded
+        residency) executes through the per-cell program instead of the
+        SPMD one: weights staged once per (scene, cell), the dispatch
+        itself gather-free. The returned cost record then carries
+        ``layers/bytes = 0`` plus ``stage_layers/stage_bytes`` — nonzero
+        ONLY on the dispatch that triggered the staging — and ``cell``,
+        so the executor can account per-cell stats."""
+        use_percell = (percell and home_cell is not None
+                       and self.shard_mesh is not None)
         if tracer is not None:
             t0 = tracer.clock()
-        rgb = self.render_tile(o_tile, d_tile, ert_eps=ert_eps,
-                               coarse_only=coarse_only)
-        cost = self.tile_gather_cost(home_cell)
+        if use_percell:
+            staged_now = int(home_cell) not in self._cell_views
+            rgb = self.render_tile_cell(o_tile, d_tile, home_cell,
+                                        ert_eps=ert_eps,
+                                        coarse_only=coarse_only,
+                                        tracer=tracer)
+            stage = self.cell_stage_cost(home_cell)
+            cost = {"layers": 0, "bytes": 0, "cell": int(home_cell),
+                    "stage_layers": stage["layers"] if staged_now else 0,
+                    "stage_bytes": stage["bytes"] if staged_now else 0}
+        else:
+            rgb = self.render_tile(o_tile, d_tile, ert_eps=ert_eps,
+                                   coarse_only=coarse_only)
+            cost = self.tile_gather_cost(home_cell)
         if tracer is not None:
             tracer.complete("plcore.dispatch", t0, cat="plcore",
                             rays=int(o_tile.shape[0]),
                             coarse_only=bool(coarse_only),
+                            percell=bool(use_percell),
+                            cell=(int(home_cell) if use_percell else -1),
                             gather_layers=cost["layers"],
                             gather_bytes=cost["bytes"],
                             **(trace_attrs or {}))

@@ -301,6 +301,9 @@ def serve_engine(args) -> dict:
     if args.route_by_shard and not args.shard_weights:
         raise SystemExit("--route-by-shard routes tiles by sharded-weight "
                          "ownership; it requires --shard-weights")
+    if args.percell_dispatch and not args.route_by_shard:
+        raise SystemExit("--percell-dispatch executes tiles on their "
+                         "routed home cell; it requires --route-by-shard")
     if args.hosts < 1:
         raise SystemExit(f"--hosts must be >= 1, got {args.hosts}")
     host_events = _parse_host_events(args)
@@ -357,14 +360,17 @@ def serve_engine(args) -> dict:
         from repro.obs import SpanTracer
         tracer = SpanTracer(sample_every=args.trace_sample)
 
-    def make_engine(depth, routed, *, chaos=False, use_cache=None):
+    def make_engine(depth, routed, *, chaos=False, use_cache=None,
+                    percell=False):
         # reference reruns are always CLEAN and SINGLE-HOST: no fault
         # plan (reusing the primary plan would continue its RNG streams,
         # not replay them), a fresh cache with the unwrapped loader, no
-        # host pool — the bit-identity anchor every multi-host/faulted
-        # run is compared against
+        # host pool — and always SPMD (percell=False), the bit-identity
+        # anchor every multi-host/faulted/per-cell run is compared
+        # against
         kw = dict(tile_rays=args.tile_rays, pipeline_depth=depth,
-                  route_by_shard=routed, max_queue=args.max_queue,
+                  route_by_shard=routed, percell_dispatch=percell,
+                  max_queue=args.max_queue,
                   degrade_on_overload=args.degrade_on_overload,
                   faults=plan if chaos else None,
                   tile_service_prior_s=prior_s,
@@ -384,7 +390,7 @@ def serve_engine(args) -> dict:
         return RenderEngine(use_cache, **kw)
 
     engine = make_engine(args.pipeline_depth, args.route_by_shard,
-                         chaos=True)
+                         chaos=True, percell=args.percell_dispatch)
     deadline_choices = ((None,) if args.deadline_ms is None
                         else (args.deadline_ms / 1e3,))
     trace = loadgen.poisson_trace(
@@ -423,6 +429,7 @@ def serve_engine(args) -> dict:
              "ert_eps": cfg.ert_eps,
              "pipeline_depth": args.pipeline_depth,
              "route_by_shard": bool(args.route_by_shard),
+             "percell_dispatch": bool(args.percell_dispatch),
              "inject_faults": bool(args.inject_faults),
              "hosts": args.hosts,
              "host_events": [f"{e.kind}:{e.host}" for e in host_events],
@@ -437,6 +444,8 @@ def serve_engine(args) -> dict:
         stats["shard_devices"] = int(shard_mesh.size)
         stats["weight_shards"] = rsh.plcore_shard_count(shard_mesh,
                                                         cfg.trunk_layers)
+    if args.percell_dispatch:
+        stats["percell"] = engine.percell_report()
     print(json.dumps(stats, indent=2))
     if args.check:
         if stats["requests_completed"] != args.requests:
@@ -563,6 +572,30 @@ def serve_engine(args) -> dict:
                     f"engine check: --route-by-shard did not reduce "
                     f"plcore_gather_count (routed {routed_g} vs unrouted "
                     f"{unrouted_g})")
+        if args.percell_dispatch:
+            # per-cell gates: the per-cell programs actually executed
+            # tiles, their pixels are bit-identical to the SPMD routed
+            # path on the same trace, and (closed loop, >= 2 scenes on a
+            # >= 2-cell mesh) at least two cells held tiles in flight —
+            # the multi-scene concurrency the refactor exists for
+            pc = stats.get("percell")
+            if not pc or pc["percell_tiles"] < 1:
+                raise SystemExit("engine check: --percell-dispatch armed "
+                                 "but no tile executed through a "
+                                 "per-cell program")
+            if pc["stage_events"] < 1:
+                raise SystemExit("engine check: per-cell dispatch ran but "
+                                 "no (scene, cell) staging was accounted")
+            rerun_and_compare(args.pipeline_depth, True, "SPMD (mesh-wide)")
+            n_cells = int(shard_mesh.size) if shard_mesh is not None else 1
+            if deterministic and args.scenes >= 2 and n_cells >= 2:
+                engaged = [c for c, v in pc["cells"].items()
+                           if v["max_in_flight"] >= 1]
+                if len(engaged) < 2:
+                    raise SystemExit(
+                        f"engine check: --percell-dispatch with "
+                        f"{args.scenes} scenes on {n_cells} cells engaged "
+                        f"only cells {engaged} — no cross-cell concurrency")
         print("engine check OK")
     return stats
 
@@ -678,6 +711,15 @@ def build_parser():
                          "per-dispatch weight gathers shrink with "
                          "locality (engine stats plcore_gather_count/"
                          "_bytes)")
+    ap.add_argument("--percell-dispatch", action="store_true",
+                    help="per-cell tile execution (with --route-by-shard): "
+                         "each routed tile runs through a program compiled "
+                         "for its home cell's device only, against weights "
+                         "staged onto that cell once per (scene, cell) — "
+                         "dispatches are gather-free and the executor's "
+                         "in-flight budget is counted per cell, so "
+                         "different cells execute different scenes' tiles "
+                         "concurrently (bit-identical to the SPMD path)")
     ap.add_argument("--hw-mix", default="16,32",
                     help="comma list of request resolutions")
     ap.add_argument("--priority-mix", default="0",

@@ -48,7 +48,8 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "MetricFamily", "MetricsRegistry",
     "StatsView", "log_buckets", "global_registry", "engine_stats_view",
     "extend_stats_view", "ENGINE_STATS_SCHEMA", "CLUSTER_STATS_SCHEMA",
-    "EngineMetrics", "TIME_BUCKETS", "DEPTH_BUCKETS",
+    "PERCELL_STATS_SCHEMA", "EngineMetrics", "TIME_BUCKETS",
+    "DEPTH_BUCKETS",
 ]
 
 
@@ -295,6 +296,21 @@ CLUSTER_STATS_SCHEMA = (
      "summed requeue -> redispatch latency"),
 )
 
+# Per-cell dispatch extension (PR 9): bound via ``extend_stats_view``
+# ONLY when an engine runs with ``percell_dispatch``, so the default
+# serialized stats/report stay byte-identical for every existing run.
+PERCELL_STATS_SCHEMA = (
+    ("percell_tiles", "counter", 0,
+     "tiles executed through a per-cell program"),
+    ("percell_stage_events", "counter", 0,
+     "(scene, cell) one-time weight stagings performed"),
+    ("percell_stage_layers", "counter", 0,
+     "remote trunk layers paid by those stagings"),
+    ("percell_stage_bytes", "counter", 0, "... and their bytes"),
+    ("percell_cells_active", "gauge", 0,
+     "distinct cells that have executed a tile"),
+)
+
 
 class _StatusCounts(dict):
     """The nested ``status_counts`` dict, backed by a labeled counter
@@ -401,6 +417,17 @@ class EngineMetrics:
         self.host_state = registry.gauge(
             f"{prefix}_host_state",
             "host lifecycle (0 healthy / 1 suspect / 2 draining / 3 dead)")
+        # labeled per-cell families (percell_dispatch runs): the 2-cell ×
+        # 2-scene concurrency gate reads max_in_flight per cell
+        self.cell_dispatches = registry.counter(
+            f"{prefix}_cell_dispatches_total",
+            "per-cell tiles dispatched through per-cell programs")
+        self.cell_in_flight = registry.gauge(
+            f"{prefix}_cell_in_flight_tiles",
+            "occupied executor slots per home cell")
+        self.cell_max_in_flight = registry.gauge(
+            f"{prefix}_cell_max_in_flight_tiles",
+            "peak executor slot occupancy per home cell")
 
 
 def engine_stats_view(registry: MetricsRegistry) -> StatsView:

@@ -354,6 +354,72 @@ def gather_plcore_packed(packed: dict, mesh: Mesh) -> dict:
             for k, a in packed.items()}
 
 
+# ---------------------------------------------- PLCore per-cell staging --
+# The owner map above is the *traffic model*; per-cell execution (PR 9)
+# makes it the *dataflow*: a routed tile's program compiles for its home
+# cell's device ONLY, reading a staged full-weight copy from that cell's
+# HBM — zero in-program collectives, the ICARUS "nothing goes off-chip"
+# economy at mesh scale. Staging pays the remote layers ONCE per
+# (scene, cell) — the same layers tile_gather_cost prices per dispatch on
+# the SPMD path — and every subsequent dispatch on that cell is local.
+# device_put is placement only, so per-cell pixels stay bit-identical to
+# the SPMD path (tests/test_parity_matrix.py + the 8-fake-device leg pin
+# this).
+
+_STAGES = _obs_registry().counter(
+    "plcore_cell_stage_layers_total",
+    "remote trunk layers staged into a home cell (once per scene+cell)")
+_STAGE_BYTES = _obs_registry().counter(
+    "plcore_cell_stage_bytes_total",
+    "modeled bytes of trunk layers staged into home cells", unit="bytes")
+
+
+def plcore_stage_count() -> int:
+    return int(_STAGES.value)
+
+
+def plcore_stage_bytes() -> int:
+    return int(_STAGE_BYTES.value)
+
+
+def plcore_cell_mesh(mesh: Mesh, cell: int) -> Mesh:
+    """1-device ("data",) sub-mesh over mesh cell ``cell`` (flat
+    ``mesh.devices`` order) — the compile target for that cell's tile
+    programs. A 1-device mesh replicates everything, so all the packed/
+    spec helpers above compose unchanged."""
+    devs = list(mesh.devices.flat)
+    return Mesh(np.array([devs[int(cell)]]), ("data",))
+
+
+def stage_plcore_packed_to_cell(packed: dict, mesh: Mesh, cell: int) -> dict:
+    """Materialize one network's (possibly layer-sharded) packed layout
+    fully resident on cell ``cell``: every array device_put onto the
+    cell's device. For trunk stacks this is the one-time cross-device
+    fetch of the layers the cell does not own — accounted through the
+    ``plcore_cell_stage_*`` counters with the owner map's remote-layer
+    pricing (owned layers are local reads, not traffic). Values are
+    bit-identical to the source layout; only placement changes."""
+    dev = list(mesh.devices.flat)[int(cell)]
+    n_layers_any = None
+    for k, a in packed.items():
+        if _is_stacked(k):
+            n_layers_any = int(a.shape[0])
+            break
+    remote = None
+    if n_layers_any is not None:
+        owned = plcore_owned_layer_mask(mesh, n_layers_any, cell)
+        remote = ~owned
+    out = {}
+    for k, a in packed.items():
+        if _is_stacked(k) and remote is not None:
+            per_layer = int(np.prod(a.shape[1:])) * a.dtype.itemsize
+            n_remote = int(remote[: a.shape[0]].sum())
+            _STAGES.inc(n_remote)
+            _STAGE_BYTES.inc(n_remote * per_layer)
+        out[k] = jax.device_put(a, dev)
+    return out
+
+
 def pspecs(decls, mesh: Mesh, rules: Rules):
     """PartitionSpec tree matching a Decl tree."""
     return jax.tree.map(lambda d: rules.spec_for(d, mesh), decls, is_leaf=is_decl)

@@ -494,6 +494,7 @@ class ClusterEngine(RenderEngine):
                  tile_rays: int = 512, max_sticky_tiles: int = 64,
                  clock=time.perf_counter, pipeline_depth: int = 1,
                  route_by_shard: bool = False,
+                 percell_dispatch: bool = False,
                  max_queue: Optional[int] = None,
                  aging_tiles: Optional[int] = None,
                  degrade_on_overload: bool = False,
@@ -515,6 +516,7 @@ class ClusterEngine(RenderEngine):
             caches[0], tile_rays=tile_rays,
             max_sticky_tiles=max_sticky_tiles, clock=clock,
             pipeline_depth=pipeline_depth, route_by_shard=route_by_shard,
+            percell_dispatch=percell_dispatch,
             max_queue=max_queue, aging_tiles=aging_tiles,
             degrade_on_overload=degrade_on_overload,
             degrade_queue_tiles=degrade_queue_tiles,
@@ -546,7 +548,7 @@ class ClusterEngine(RenderEngine):
                 max_tile_retries=max_tile_retries,
                 retry_backoff_s=retry_backoff_s,
                 check_finite=check_finite, clock=clock,
-                tracer=self.tracer)
+                tracer=self.tracer, percell=percell_dispatch)
             host = Host(i, cache, ex, mesh=mesh_list[i], devices=groups[i])
             ex.host = host
             ex.redispatch_hook = (lambda tile, h=host:

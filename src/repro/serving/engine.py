@@ -543,7 +543,8 @@ class TileExecutor:
                  retry_backoff_s: float = 0.0,
                  max_retry_backoff_s: float = 0.05,
                  check_finite: bool = True, clock=time.perf_counter,
-                 sleep=time.sleep, redispatch_hook=None, tracer=None):
+                 sleep=time.sleep, redispatch_hook=None, tracer=None,
+                 percell: bool = False):
         if depth < 1:
             raise ValueError(f"pipeline depth must be >= 1, got {depth}")
         self.completion = completion
@@ -553,6 +554,13 @@ class TileExecutor:
         self.depth = int(depth)
         self.faults = faults
         self.straggler = straggler
+        # per-cell dispatch (PR 9): routed tiles execute through programs
+        # compiled for their home cell only, and the in-flight budget is
+        # counted PER CELL — each cell gets its own ``depth`` slots, so
+        # two cells genuinely hold different scenes' tiles concurrently
+        # instead of the whole mesh serializing over one slot ring
+        self.percell = bool(percell)
+        self.cell_stats: Dict[Optional[int], dict] = {}
         # cluster failover: tried BEFORE the local retry ladder — a tile
         # that failed here is first offered to a DIFFERENT host; only
         # when the hook declines (returns None) does the local
@@ -584,6 +592,7 @@ class TileExecutor:
         rgb, cost = tile.pp.dispatch_tile(
             jnp.asarray(tile.rays_o), jnp.asarray(tile.rays_d),
             home_cell=tile.home_cell, coarse_only=tile.degraded,
+            percell=self.percell,
             tracer=tr if tr.enabled else None,
             trace_attrs={"tile": tile.tid, "host": tile.host_id,
                          "scene": tile.scene_id} if tr.enabled else None)
@@ -671,6 +680,57 @@ class TileExecutor:
             st["routed_tiles"] += 1
         if tile.degraded:
             st["degraded_tiles"] += 1
+        if "cell" in cost and "percell_tiles" in st:
+            # a per-cell execution: the dispatch itself is gather-free;
+            # stage_* is nonzero only on the dispatch that staged the
+            # (scene, cell) weights — the one-time residency transfer
+            st["percell_tiles"] += 1
+            if cost.get("stage_layers"):
+                st["percell_stage_events"] += 1
+                st["percell_stage_layers"] += cost["stage_layers"]
+                st["percell_stage_bytes"] += cost["stage_bytes"]
+
+    # --------------------------------------------------- per-cell slots ----
+    def _cell_of(self, tile: _Tile) -> Optional[int]:
+        """The in-flight stream a tile occupies: its home cell under
+        per-cell dispatch, else the single global (None) stream."""
+        return tile.home_cell if self.percell else None
+
+    def _cell_in_flight(self, cell: Optional[int]) -> int:
+        return sum(1 for s in self._slots if self._cell_of(s[0]) == cell)
+
+    def _note_cell_dispatch(self, tile: _Tile) -> None:
+        """Per-cell occupancy bookkeeping at dispatch time — the 2-cell
+        concurrency gate reads ``cell_stats[cell]["max_in_flight"]``."""
+        if not self.percell:
+            return
+        cell = self._cell_of(tile)
+        n = self._cell_in_flight(cell)
+        cs = self.cell_stats.setdefault(
+            cell, {"dispatches": 0, "max_in_flight": 0})
+        cs["dispatches"] += 1
+        cs["max_in_flight"] = max(cs["max_in_flight"], n)
+        st = self.stats
+        if "percell_cells_active" in st:
+            st["percell_cells_active"] = len(self.cell_stats)
+        m = getattr(self.stats, "m", None)
+        if m is not None:
+            label = "none" if cell is None else cell
+            m.cell_dispatches.labels(cell=label).inc()
+            m.cell_in_flight.labels(cell=label).set(n)
+            m.cell_max_in_flight.labels(cell=label).set(cs["max_in_flight"])
+
+    def drain_cell_one(self, cell: Optional[int]) -> bool:
+        """Materialize the OLDEST in-flight tile of ONE cell stream (may
+        sit mid-ring: other cells' younger tiles stay in flight — that
+        independence is the per-cell concurrency win). Same recovery /
+        scatter / unpin path as ``drain_one``."""
+        for i, s in enumerate(self._slots):
+            if self._cell_of(s[0]) == cell:
+                del self._slots[i]
+                self._finish_slot(*s)
+                return True
+        return False
 
     def _update_service_ewma(self, dt: float) -> None:
         prev = self.stats.get("tile_service_s_ewma")
@@ -688,7 +748,7 @@ class TileExecutor:
         A dispatch-time failure is resolved SYNCHRONOUSLY through the
         retry ladder (it never occupies a slot) — this method does not
         raise for handled fault classes."""
-        self.cache.pin(tile.scene_id)
+        self.cache.pin(tile.scene_id, cell=self._cell_of(tile))
         tr = self.tracer
         if tr.enabled:
             tr.event("tile.dispatch", cat="tile", tile=tile.tid,
@@ -705,20 +765,28 @@ class TileExecutor:
             arr, cost = self._resolve_sync(tile)
             self._account(tile, cost)
             self.completion.scatter(tile, arr)
-            self.cache.unpin(tile.scene_id)
+            self.cache.unpin(tile.scene_id, cell=self._cell_of(tile))
             return
         sp = (tr.begin("tile.device_compute", cat="tile", tile=tile.tid,
                        host=tile.host_id, slot=len(self._slots))
               if tr.enabled else None)
         self._slots.append((tile, rgb, self._clock(), extra, sp))
         self._account(tile, cost)
+        self._note_cell_dispatch(tile)
         self.stats["max_in_flight"] = max(self.stats["max_in_flight"],
                                           len(self._slots))
         m = getattr(self.stats, "m", None)
         if m is not None:
             m.in_flight_tiles.set(len(self._slots))
-        while len(self._slots) >= self.depth:
-            self.drain_one()
+        if self.percell:
+            # the depth budget is PER CELL: this tile's stream drains
+            # when ITS cell is full, other cells' tiles stay in flight
+            cell = self._cell_of(tile)
+            while self._cell_in_flight(cell) >= self.depth:
+                self.drain_cell_one(cell)
+        else:
+            while len(self._slots) >= self.depth:
+                self.drain_one()
 
     def drain_one(self) -> bool:
         """Materialize the OLDEST in-flight tile (the only host sync in
@@ -726,7 +794,13 @@ class TileExecutor:
         it, release its scene pin. Never raises for handled faults."""
         if not self._slots:
             return False
-        tile, rgb, t0, extra, sp = self._slots.popleft()
+        self._finish_slot(*self._slots.popleft())
+        return True
+
+    def _finish_slot(self, tile, rgb, t0, extra, sp) -> None:
+        """The drain body shared by ``drain_one`` (oldest overall) and
+        ``drain_cell_one`` (oldest of one cell stream): materialize,
+        recover if corrupt/straggled, scatter, unpin."""
         arr = np.asarray(rgb)
         tr = self.tracer
         tr.end(sp)
@@ -772,8 +846,7 @@ class TileExecutor:
             m.in_flight_tiles.set(len(self._slots))
         self._update_service_ewma(dt)
         self.completion.scatter(tile, arr)
-        self.cache.unpin(tile.scene_id)
-        return True
+        self.cache.unpin(tile.scene_id, cell=self._cell_of(tile))
 
     def drain_all(self) -> None:
         while self.drain_one():
@@ -795,7 +868,7 @@ class TileExecutor:
             if tr.enabled:
                 tr.event("tile.abandon", cat="tile", tile=tile.tid,
                          host=tile.host_id)
-            self.cache.unpin(tile.scene_id)
+            self.cache.unpin(tile.scene_id, cell=self._cell_of(tile))
             tiles.append(tile)
         return tiles
 
@@ -933,6 +1006,7 @@ class RenderEngine:
     def __init__(self, cache: SceneCache, *, tile_rays: int = 512,
                  max_sticky_tiles: int = 64, clock=time.perf_counter,
                  pipeline_depth: int = 1, route_by_shard: bool = False,
+                 percell_dispatch: bool = False,
                  max_queue: Optional[int] = None,
                  aging_tiles: Optional[int] = None,
                  degrade_on_overload: bool = False,
@@ -947,9 +1021,13 @@ class RenderEngine:
                  check_finite: bool = True,
                  tile_service_prior_s: Optional[float] = None,
                  tracer=None, registry=None):
+        if percell_dispatch and not route_by_shard:
+            raise ValueError("percell_dispatch executes tiles on their "
+                             "routed home cell — pass route_by_shard=True")
         self.cache = cache
         self.faults = faults
         self._clock = clock
+        self.percell_dispatch = bool(percell_dispatch)
         # observability: a per-engine registry backs the stats dict (the
         # keys, order and value types come from ENGINE_STATS_SCHEMA —
         # the old literal dict, now registry-derived so a counter can't
@@ -959,6 +1037,12 @@ class RenderEngine:
             else MetricsRegistry()
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.stats = engine_stats_view(self.registry)
+        if percell_dispatch:
+            # extension block, bound ONLY when per-cell dispatch is on so
+            # the default serialized stats stay byte-identical
+            from repro.obs.metrics import (PERCELL_STATS_SCHEMA,
+                                           extend_stats_view)
+            extend_stats_view(self.stats, PERCELL_STATS_SCHEMA)
         cache.tracer = self.tracer
         self.scheduler = TileScheduler(
             cache, tile_rays=tile_rays, max_sticky_tiles=max_sticky_tiles,
@@ -987,7 +1071,8 @@ class RenderEngine:
             faults=faults, straggler=monitor,
             max_tile_retries=max_tile_retries,
             retry_backoff_s=retry_backoff_s,
-            check_finite=check_finite, clock=clock, tracer=self.tracer)
+            check_finite=check_finite, clock=clock, tracer=self.tracer,
+            percell=percell_dispatch)
         # admission control needs the in-flight count; termination needs
         # the sink — wire the cross-layer references the façade owns
         self.scheduler.completion = self.completion
@@ -1094,3 +1179,24 @@ class RenderEngine:
         if self.faults is not None:
             out["faults_injected"] = self.faults.summary()
         return out
+
+    def percell_report(self) -> Optional[dict]:
+        """Per-cell dispatch summary (``None`` unless the engine runs
+        with ``percell_dispatch``): per-cell dispatch counts and peak
+        in-flight occupancy plus the one-time staging totals — what the
+        bench's ``serving.percell`` block and serve.py's ``--check``
+        concurrency gate persist."""
+        if not self.percell_dispatch:
+            return None
+        st = self.stats
+        cells = {str(c): dict(v)
+                 for c, v in sorted(self.executor.cell_stats.items(),
+                                    key=lambda kv: (kv[0] is None, kv[0]))}
+        return {
+            "cells": cells,
+            "percell_tiles": st["percell_tiles"],
+            "stage_events": st["percell_stage_events"],
+            "stage_layers": st["percell_stage_layers"],
+            "stage_bytes": st["percell_stage_bytes"],
+            "cells_active": st["percell_cells_active"],
+        }

@@ -28,7 +28,7 @@ counters show it).
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 
@@ -105,6 +105,10 @@ class SceneCache:
         self._entries: "OrderedDict[str, Tuple[PackedPlcore, int]]" = \
             OrderedDict()
         self._pins: Dict[str, int] = {}
+        # per-cell pin accounting (percell dispatch): scene -> cell ->
+        # refcount. A sub-account of _pins, never a second gate — a
+        # scene is evictable iff its TOTAL refcount is zero.
+        self._cell_pins: Dict[str, Dict[int, int]] = {}
         self.fail_backoff = int(fail_backoff)
         self.max_fail_backoff = int(max_fail_backoff)
         # scene -> [consecutive real failures, fail-fast credits left]
@@ -130,29 +134,51 @@ class SceneCache:
     def resident_bytes(self) -> int:
         return sum(nb for _, nb in self._entries.values())
 
-    def pin(self, scene_id: str) -> None:
+    def pin(self, scene_id: str, cell: "Optional[int]" = None) -> None:
         """Refcount one in-flight use of a resident scene: a pinned entry
         is skipped by eviction until its last ``unpin`` (the executor pins
         at tile dispatch and unpins when the tile's scatter drains, so a
-        resident can never be evicted under an in-flight dispatch)."""
+        resident can never be evicted under an in-flight dispatch).
+        ``cell`` (percell dispatch) additionally attributes the pin to
+        the tile's home cell — ``pinned_cells`` shows which cells hold a
+        scene's tiles in flight; eviction still gates on the total."""
         self._pins[scene_id] = self._pins.get(scene_id, 0) + 1
+        if cell is not None:
+            by_cell = self._cell_pins.setdefault(scene_id, {})
+            by_cell[int(cell)] = by_cell.get(int(cell), 0) + 1
         if self.tracer.enabled:
             self.tracer.event("cache.pin", cat="cache", scene=scene_id,
-                              host=self.trace_host,
+                              host=self.trace_host, cell=cell,
                               refs=self._pins[scene_id])
 
-    def unpin(self, scene_id: str) -> None:
+    def unpin(self, scene_id: str, cell: "Optional[int]" = None) -> None:
         n = self._pins.get(scene_id, 0) - 1
         if n <= 0:
             self._pins.pop(scene_id, None)
         else:
             self._pins[scene_id] = n
+        if cell is not None:
+            by_cell = self._cell_pins.get(scene_id)
+            if by_cell is not None:
+                c = by_cell.get(int(cell), 0) - 1
+                if c <= 0:
+                    by_cell.pop(int(cell), None)
+                else:
+                    by_cell[int(cell)] = c
+                if not by_cell:
+                    self._cell_pins.pop(scene_id, None)
         if self.tracer.enabled:
             self.tracer.event("cache.unpin", cat="cache", scene=scene_id,
-                              host=self.trace_host, refs=max(0, n))
+                              host=self.trace_host, cell=cell,
+                              refs=max(0, n))
 
     def pinned(self, scene_id: str) -> bool:
         return scene_id in self._pins
+
+    def pinned_cells(self, scene_id: str) -> dict:
+        """cell -> in-flight pin refcount for one scene (empty when no
+        per-cell tile is in flight)."""
+        return dict(self._cell_pins.get(scene_id, {}))
 
     def discard(self, scene_id: str) -> bool:
         """Drop one resident entry outside the LRU policy (the cluster's

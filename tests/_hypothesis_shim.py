@@ -101,9 +101,17 @@ def given(*args, **strategies):
 
 
 def install() -> None:
-    """Register hypothesis/{strategies,extra.numpy} stand-ins."""
+    """Register hypothesis/{strategies,extra.numpy} stand-ins — unless
+    the REAL package is importable, in which case it wins and the shim
+    registers nothing (property tests then get adaptive search,
+    shrinking and the example database instead of the fixed sweep)."""
     if "hypothesis" in sys.modules:
         return
+    try:
+        import hypothesis  # noqa: F401
+        return
+    except ImportError:
+        pass
     hyp = types.ModuleType("hypothesis")
     hyp.given, hyp.settings = given, settings
     hyp.__version__ = "0.0-shim"

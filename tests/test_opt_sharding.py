@@ -1,16 +1,11 @@
 """Parity tests for the beyond-paper optimized sharding paths (§Perf):
 the shard_map batch-split attention and the explicit-EP MoE must match the
-plain GSPMD paths numerically. Runs in a subprocess (needs an 8-device
-fake mesh, which must be configured before jax initializes)."""
-import os
-import subprocess
-import sys
-
+plain GSPMD paths numerically. Runs through the conftest ``fake_devices``
+subprocess fixture (needs an 8-device fake mesh, which must be configured
+before jax initializes)."""
 import pytest
 
 _SNIPPET = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from repro.configs import smoke_config
 from repro.models.model_zoo import build_model
@@ -52,10 +47,5 @@ print("ALL OK")
 
 
 @pytest.mark.slow
-def test_optimized_paths_match_baseline():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    out = subprocess.run([sys.executable, "-c", _SNIPPET], env=env,
-                         capture_output=True, text=True, timeout=560)
-    assert out.returncode == 0, out.stderr[-3000:]
-    assert "ALL OK" in out.stdout
+def test_optimized_paths_match_baseline(fake_devices):
+    fake_devices(_SNIPPET)

@@ -1,0 +1,147 @@
+"""Property-based invariants over the rendering core.
+
+Runs under REAL hypothesis when the package is installed (adaptive
+search + shrinking) and under the deterministic ``_hypothesis_shim``
+fixed-seed sweep on bare containers — the conftest installs whichever
+is available, and these tests use only the shared API slice (keyword
+``given``, ``settings``, floats/integers/arrays strategies).
+
+Three invariant families the example-based suites can't sweep:
+
+* Ray-order permutation invariance: the PLCore treats every ray
+  independently, so permuting a tile's rays permutes the output rows and
+  changes NOTHING else — bit for bit (each row's fp reduction order is
+  internal to the row).
+* Tail-pad no-leak: the tile program's padded lanes (ray count not a
+  multiple of the tile size) must be unable to influence real lanes —
+  rendering the same real rays next to two DIFFERENT garbage tails
+  yields bit-identical real rows.
+* Sampling monotonicity/exactness: ``importance_det`` returns
+  nondecreasing samples inside the ``t_mid`` span for any weight
+  profile (including degenerate single-bin pdfs), and
+  ``merge_sorted_ranks`` equals the sort-based merge bit-for-bit on
+  arbitrary sorted inputs with ties.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings
+import hypothesis.strategies as st
+from hypothesis.extra.numpy import arrays
+
+from repro.configs.nerf_icarus import tiny
+from repro.core import sampling
+from repro.core.plcore import flatten_pad_rays, plcore_decls, render_rays
+from repro.models.params import init_params
+
+N_RAYS = 16
+
+
+@pytest.fixture(scope="module")
+def scene():
+    cfg = tiny()
+    params = init_params(plcore_decls(cfg), jax.random.PRNGKey(0),
+                         "float32")
+    k = jax.random.PRNGKey(1)
+    o = jax.random.uniform(k, (N_RAYS, 3), minval=-0.5, maxval=0.5)
+    d = jax.random.uniform(jax.random.PRNGKey(2), (N_RAYS, 3),
+                           minval=0.2, maxval=1.0)
+    return cfg, params, np.asarray(o), np.asarray(d)
+
+
+# ------------------------------------------------ permutation invariance ---
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=(1 << 16)))
+def test_ray_order_permutation_invariance(scene, seed):
+    cfg, params, o, d = scene
+    perm = np.random.default_rng(seed).permutation(N_RAYS)
+    base = np.asarray(render_rays(cfg, params, jnp.asarray(o),
+                                  jnp.asarray(d))["rgb"])
+    shuf = np.asarray(render_rays(cfg, params, jnp.asarray(o[perm]),
+                                  jnp.asarray(d[perm]))["rgb"])
+    np.testing.assert_array_equal(shuf, base[perm])
+
+
+# -------------------------------------------------------- tail-pad no-leak -
+@settings(max_examples=10, deadline=None)
+@given(n_real=st.integers(min_value=1, max_value=N_RAYS - 1),
+       tail=arrays(np.float32, (N_RAYS, 3),
+                   elements=st.floats(min_value=0.1, max_value=1.0,
+                                   width=32)))
+def test_tail_pad_cannot_leak_into_real_rays(scene, n_real, tail):
+    """Two renders of the same real rays with different garbage tails:
+    the real rows must be bit-identical (per-ray independence is what
+    makes flatten_pad_rays' zero-pad safe)."""
+    cfg, params, o, d = scene
+    for garbage in (tail, tail[::-1] + 0.25):
+        assert np.isfinite(garbage).all()
+    outs = []
+    for garbage in (tail, tail[::-1] + 0.25):
+        o_pad = np.concatenate([o[:n_real], garbage[n_real:]], axis=0)
+        d_pad = np.concatenate([d[:n_real], garbage[n_real:]], axis=0)
+        rgb = np.asarray(render_rays(cfg, params, jnp.asarray(o_pad),
+                                     jnp.asarray(d_pad))["rgb"])
+        outs.append(rgb[:n_real])
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(min_value=1, max_value=200),
+       batch=st.integers(min_value=1, max_value=64))
+def test_flatten_pad_rays_structure(n, batch):
+    """The shared tiler: true ray count preserved, first-n rows exact,
+    tile count minimal, padded direction rows never zero-norm."""
+    rng = np.random.default_rng(n * 1000 + batch)
+    H = n
+    ro = rng.uniform(-1, 1, (H, 1, 3)).astype(np.float32)
+    rd = rng.uniform(0.2, 1, (H, 1, 3)).astype(np.float32)
+    o_t, d_t, n_out = flatten_pad_rays(jnp.asarray(ro), jnp.asarray(rd),
+                                       batch)
+    assert n_out == n
+    T = -(-n // batch)
+    assert o_t.shape == d_t.shape == (T, batch, 3)
+    np.testing.assert_array_equal(
+        np.asarray(o_t).reshape(-1, 3)[:n], ro.reshape(-1, 3))
+    np.testing.assert_array_equal(
+        np.asarray(d_t).reshape(-1, 3)[:n], rd.reshape(-1, 3))
+    norms = np.linalg.norm(np.asarray(d_t).reshape(-1, 3), axis=-1)
+    assert (norms > 0).all()
+
+
+# -------------------------------------------------- sampling monotonicity --
+@settings(max_examples=10, deadline=None)
+@given(w=arrays(np.float32, (4, 17),
+                elements=st.floats(min_value=0.0, max_value=1.0,
+                                   width=32)),
+       lo=st.floats(min_value=0.5, max_value=2.0),
+       span=st.floats(min_value=0.1, max_value=4.0))
+def test_importance_det_monotone_and_in_span(w, lo, span):
+    t_mid = jnp.linspace(lo, lo + span, 17)[None, :].repeat(4, axis=0)
+    out = np.asarray(sampling.importance_det(t_mid, jnp.asarray(w), 12))
+    assert out.shape == (4, 12)
+    assert (np.diff(out, axis=-1) >= 0).all(), "samples must be sorted"
+    assert (out >= lo - 1e-5).all() and (out <= lo + span + 1e-5).all()
+    # bit-identity with the host searchsorted/gather path, any weights
+    np.testing.assert_array_equal(
+        out, np.asarray(sampling.importance(t_mid, jnp.asarray(w), 12,
+                                            key=None)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(a=arrays(np.float32, (3, 10),
+                elements=st.floats(min_value=0.0, max_value=1.0,
+                                   width=32)),
+       b=arrays(np.float32, (3, 14),
+                elements=st.floats(min_value=0.0, max_value=1.0,
+                                   width=32)))
+def test_merge_sorted_ranks_matches_sort(a, b):
+    """Rank-merge == jnp.sort merge on arbitrary sorted inputs; ties
+    forced by quantizing to 1/8 steps within AND across the sets."""
+    t_a = jnp.sort(jnp.asarray(np.round(a * 8) / 8), axis=-1)
+    t_b = jnp.sort(jnp.asarray(np.round(b * 8) / 8), axis=-1)
+    merged = np.asarray(sampling.merge_sorted_ranks(t_a, t_b))
+    assert (np.diff(merged, axis=-1) >= 0).all(), "merge must be sorted"
+    np.testing.assert_array_equal(
+        merged, np.asarray(sampling.merge_sorted(t_a, t_b)))

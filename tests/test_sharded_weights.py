@@ -7,18 +7,14 @@ Two layers of coverage:
   model is self-consistent, and a 1-device mesh degrades gracefully to
   replicated while still rendering bit-identically through the sharded
   code path.
-* Subprocess (XLA_FLAGS 8 fake CPU devices — the flag must be set before
-  jax initializes, hence the test_opt_sharding.py pattern): on a REAL
+* Subprocess (the conftest ``fake_devices`` fixture — 8 fake CPU
+  devices, configured before jax initializes): on a REAL
   8-way layer shard, image (XLA), kernel (one-pass + two-pass fused),
   RMCM and engine modes all render bit-identical pixels vs the
   replicated path; per-device resident bytes shrink ~1/8; the SceneCache
   holds proportionally more sharded scenes at fixed capacity; and the
   per-layer gather counter pins the just-in-time collective structure.
 """
-import os
-import subprocess
-import sys
-
 import numpy as np
 import pytest
 
@@ -102,8 +98,6 @@ def test_single_device_mesh_degrades_to_replicated():
 
 # ------------------------------------------------- 8-device subprocess -----
 _SNIPPET = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np
 from dataclasses import replace
 import jax
@@ -226,10 +220,5 @@ print("ALL OK")
 
 
 @pytest.mark.slow
-def test_sharded_weights_multidevice():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    out = subprocess.run([sys.executable, "-c", _SNIPPET], env=env,
-                         capture_output=True, text=True, timeout=560)
-    assert out.returncode == 0, out.stderr[-3000:]
-    assert "ALL OK" in out.stdout
+def test_sharded_weights_multidevice(fake_devices):
+    fake_devices(_SNIPPET)
