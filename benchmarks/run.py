@@ -42,13 +42,17 @@ def main() -> None:
     suites = {
         "table1": table1_energy.run,
         "fig8": fig8_rmcm_psnr.run,
+        "psnr": fig8_rmcm_psnr.run,     # alias; persists into BENCH json
         "sampling": sampling_twopass.run,
         "fusion": plcore_fusion.run,
         "serving": serving_engine.run,
         "roofline": roofline.run,
     }
-    pick = [a for a in sys.argv[1:] if not a.startswith("-")]
-    names = pick or list(suites)
+    # "fig8" and "psnr" are one suite: normalize so results persist once
+    pick = [("psnr" if a == "fig8" else a)
+            for a in sys.argv[1:] if not a.startswith("-")]
+    names = list(dict.fromkeys(pick)) or [
+        n for n in suites if n != "fig8"]
     print("name,us_per_call,derived")
     results = {}
     for n in names:
@@ -61,8 +65,10 @@ def main() -> None:
     # the canonical cross-PR trajectory numbers with shrunken-scale timings
     smoke = any(os.environ.get(k) is not None
                 for k in ("BENCH_PLCORE_HW", "BENCH_SERVING_SCENES",
-                          "BENCH_SERVING_REQUESTS", "BENCH_SERVING_TILE"))
-    persist = {k: results[k] for k in ("fusion", "serving") if k in results}
+                          "BENCH_SERVING_REQUESTS", "BENCH_SERVING_TILE",
+                          "BENCH_FIG8_STEPS", "BENCH_FIG8_HW"))
+    persist = {k: results[k] for k in ("fusion", "serving", "psnr")
+               if k in results}
     if persist and not smoke:
         root = pathlib.Path(__file__).resolve().parent.parent
         path = root / "BENCH_plcore.json"
@@ -85,13 +91,15 @@ def main() -> None:
         doc = dict(prev)
         if "fusion" in persist:
             entry.update(persist["fusion"])
-            serving_prev = doc.get("serving")
+            kept = {k: doc[k] for k in ("serving", "psnr") if k in doc}
             doc = dict(persist["fusion"])
-            if serving_prev is not None:
-                doc["serving"] = serving_prev
+            doc.update(kept)
         if "serving" in persist:
             entry["serving"] = persist["serving"]
             doc["serving"] = persist["serving"]
+        if "psnr" in persist:
+            entry["psnr"] = persist["psnr"]
+            doc["psnr"] = persist["psnr"]
         doc["history"] = history + [entry]
         path.write_text(json.dumps(doc, indent=2) + "\n")
         print(f"# wrote {path} ({len(doc['history'])} history entries)",

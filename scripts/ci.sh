@@ -114,6 +114,35 @@ python -m repro.launch.serve --mode engine --scenes 3 --requests 9 \
     --trace-out runs/ci_trace.json --metrics-out runs/ci_metrics.prom
 python scripts/check_trace.py runs/ci_trace.json runs/ci_metrics.prom
 
+echo "== adaptive sampling smoke (ASDR: budget classes + trunk memo) =="
+# per-scene density calibration + budget-bucketed dispatch + cross-ray
+# trunk memoization over the fused-kernel engine. --scene-bias -0.5
+# carves the canonical mixed scene (real empty space, all classes
+# populated). --check fails the run unless every tile took the adaptive
+# path, the trunk memo served >= 1 hit, EVERY budget class was exercised
+# by real rays, and an adaptive-OFF rerun of the same trace is
+# BIT-IDENTICAL to the synchronous current pipeline (the flag off must
+# change nothing)
+python -m repro.launch.serve --mode engine --scenes 3 --requests 10 \
+    --loop closed --seed 0 --kernel --fuse-two-pass \
+    --adaptive-sampling --scene-bias -0.5 --memo-mb 8 \
+    --hw-mix 16 --tile-rays 128 --check
+
+echo "== adaptive PSNR gate (fig8 smoke: drop vs static fused <= 0.1 dB) =="
+# QAT-trains the tiny scene at smoke scale and renders it through the
+# static fused kernel vs the adaptive path; the adaptive render may cost
+# at most PSNR_DROP_GATE_DB (0.1 dB) of PSNR-vs-GT
+BENCH_FIG8_STEPS=120 BENCH_FIG8_HW=20 python - <<'EOF'
+from benchmarks import fig8_rmcm_psnr as f
+out = f.run()
+drop, gate = out["adaptive_psnr_drop_db"], out["psnr_drop_gate_db"]
+assert drop <= gate, (
+    f"adaptive PSNR drop {drop} dB exceeds the {gate} dB gate "
+    f"(fused_vs_gt={out['fused_vs_gt']}, "
+    f"adaptive_vs_gt={out['adaptive_vs_gt']})")
+print(f"adaptive PSNR gate OK (drop {drop} dB <= {gate} dB)")
+EOF
+
 echo "== docs link check =="
 python scripts/check_docs_links.py
 

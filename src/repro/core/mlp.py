@@ -83,17 +83,14 @@ def _matmul_split(parts, layer, quant_layer):
     return y + layer["b"]
 
 
-def nerf_mlp_apply(cfg: NerfConfig, params: dict, pe_pos, pe_dir,
-                   quant: Optional[dict] = None):
-    """(pe_pos (..., pos_enc_dim), pe_dir (..., dir_enc_dim))
-    -> (sigma_raw (...,), rgb (..., 3) in [0,1]).
+def nerf_trunk_apply(cfg: NerfConfig, params: dict, pe_pos,
+                     quant: Optional[dict] = None):
+    """Position-only half of the engine: trunk + density/feature heads.
 
-    ``quant``: optional RMCM-quantized mirror of ``params`` — the hidden
-    (MONB) matmuls read approximated weights, heads stay exact, matching
-    the MONB/SONB split.
-
-    ``pe_dir`` may be pre-broadcast (..., de) or per-ray (R, 1, de): the
-    split color matmul broadcasts it for free (no (T, W+de) concat).
+    (pe_pos (..., pos_enc_dim)) -> (sigma_raw (...,), feat (..., W)).
+    Everything view-dependent is downstream (``nerf_color_apply``), which
+    makes this output the memoizable unit for cross-ray sample reuse: two
+    rays crossing the same quantized position share sigma|feat exactly.
     """
     qt = (quant or {}).get("trunk", {})
     h = pe_pos
@@ -108,10 +105,32 @@ def nerf_mlp_apply(cfg: NerfConfig, params: dict, pe_pos, pe_dir,
                                     qt.get(f"l{i}")))
     sigma = _matmul(h, params["sigma"], None)[..., 0]        # SONB (exact)
     feat = _matmul(h, params["feat"], (quant or {}).get("feat"))
+    return sigma, feat
+
+
+def nerf_color_apply(cfg: NerfConfig, params: dict, feat, pe_dir,
+                     quant: Optional[dict] = None):
+    """View-dependent color branch: (feat (..., W), pe_dir) -> rgb [0,1]."""
     hc = jax.nn.relu(_matmul_split([feat, pe_dir], params["color0"],
                                    (quant or {}).get("color0")))
     raw = _matmul(hc, params["rgb"], None)                   # SONB (exact)
-    return sigma, jax.nn.sigmoid(raw)
+    return jax.nn.sigmoid(raw)
+
+
+def nerf_mlp_apply(cfg: NerfConfig, params: dict, pe_pos, pe_dir,
+                   quant: Optional[dict] = None):
+    """(pe_pos (..., pos_enc_dim), pe_dir (..., dir_enc_dim))
+    -> (sigma_raw (...,), rgb (..., 3) in [0,1]).
+
+    ``quant``: optional RMCM-quantized mirror of ``params`` — the hidden
+    (MONB) matmuls read approximated weights, heads stay exact, matching
+    the MONB/SONB split.
+
+    ``pe_dir`` may be pre-broadcast (..., de) or per-ray (R, 1, de): the
+    split color matmul broadcasts it for free (no (T, W+de) concat).
+    """
+    sigma, feat = nerf_trunk_apply(cfg, params, pe_pos, quant)
+    return sigma, nerf_color_apply(cfg, params, feat, pe_dir, quant)
 
 
 # ----------------------------------------------------- generic coordinate MLP

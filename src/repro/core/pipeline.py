@@ -56,10 +56,12 @@ regression oracle (bit-for-bit at fp32) and benchmark baseline
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.nerf_icarus import NerfConfig
 from repro.core import plcore
@@ -159,7 +161,8 @@ def _ray_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
 
 def _tile_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
              fuse_two_pass: bool = False, shard_mesh=None,
-             coarse_only: bool = False, cell: Optional[int] = None):
+             coarse_only: bool = False, cell: Optional[int] = None,
+             adaptive: bool = False):
     """Tile-stream program: ONE pre-coalesced fixed-shape ray tile ->
     pixel colors. This is the serving-engine entry point — the engine
     coalesces rays from many concurrent requests into a tile, dispatches
@@ -187,9 +190,17 @@ def _tile_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
     the cache key: each cell's program is its own compiled artifact
     pinned to that cell's device, which is exactly what lets two cells
     execute different scenes' tiles concurrently instead of serializing
-    the whole mesh over one SPMD tile stream."""
+    the whole mesh over one SPMD tile stream.
+
+    ``adaptive`` compiles the budget-bucketed variant: the program takes
+    an extra per-ray ``alive`` mask forwarded to the fused kernel's ERT
+    compaction (trunk-memo hits enter dead). Per-budget programs arise
+    from the SAME cache-key mechanism as per-cell ones: the caller
+    replaces ``cfg.n_fine`` with the bucket's budget, and cfg is the
+    leading key element — each (budget, flags) combination is its own
+    compiled artifact."""
     key = (cfg, use_kernel, float(ert_eps), fuse_two_pass, shard_mesh,
-           coarse_only, cell)
+           coarse_only, cell, adaptive)
     fn = _TILE_JITS.get(key)
     if fn is None:
         if coarse_only:
@@ -205,6 +216,15 @@ def _tile_fn(cfg: NerfConfig, use_kernel: bool, ert_eps: float,
                     o_tile, d_tile, t_c, use_kernel,
                     (packed or {}).get("coarse"))
                 return volume.white_background(rgb_c, aux_c["acc"])
+        elif adaptive:
+            def run(params, quant, packed, o_tile, d_tile, alive):
+                params, quant, packed = _materialize(
+                    cfg, params, quant, packed, shard_mesh, use_kernel)
+                out = plcore.render_rays(
+                    cfg, params, o_tile, d_tile, quant=quant, packed=packed,
+                    use_kernel=use_kernel, fuse_two_pass=fuse_two_pass,
+                    ert_eps=ert_eps, white_bkgd=True, alive=alive)
+                return out["rgb"]
         else:
             def run(params, quant, packed, o_tile, d_tile):
                 params, quant, packed = _materialize(
@@ -332,7 +352,9 @@ class PackedPlcore:
 
     def render_tile(self, o_tile, d_tile,
                     ert_eps: Optional[float] = None,
-                    coarse_only: bool = False) -> jnp.ndarray:
+                    coarse_only: bool = False,
+                    budget: Optional[int] = None,
+                    alive=None) -> jnp.ndarray:
         """Render ONE pre-coalesced ray tile -> rgb (n, 3). The serving
         engine's dispatch path: fixed tile shapes hit the same compiled
         program every call (no per-request retrace), and the tile body is
@@ -340,9 +362,24 @@ class PackedPlcore:
         pixels match the per-request render bit-for-bit. Off-CPU the
         tile buffers are DONATED — pass fresh arrays per dispatch.
         ``coarse_only=True`` is the overload-degradation program: the
-        coarse pass only, ~1/3 of the sample budget (see ``_tile_fn``)."""
+        coarse pass only, ~1/3 of the sample budget (see ``_tile_fn``).
+
+        ``budget`` (adaptive sampling) renders this tile with
+        ``n_fine=budget`` instead of the config's full budget: the
+        replaced cfg keys its own compiled program, so each budget class
+        is a distinct fixed-shape artifact reused across tiles of that
+        class. ``alive`` is the optional per-ray dead-row mask (trunk-memo
+        hits enter dead; requires the fused-kernel path)."""
         eps = self.ert_eps if ert_eps is None else float(ert_eps)
-        fn = _tile_fn(self.cfg, self.use_kernel, eps, self.fuse_two_pass,
+        cfg = self.cfg
+        if budget is not None and int(budget) != cfg.n_fine:
+            cfg = dataclasses.replace(cfg, n_fine=int(budget))
+        if alive is not None:
+            fn = _tile_fn(cfg, self.use_kernel, eps, self.fuse_two_pass,
+                          self.shard_mesh, coarse_only, adaptive=True)
+            return fn(self.params, self.quant, self.packed, o_tile, d_tile,
+                      alive)
+        fn = _tile_fn(cfg, self.use_kernel, eps, self.fuse_two_pass,
                       self.shard_mesh, coarse_only)
         return fn(self.params, self.quant, self.packed, o_tile, d_tile)
 
@@ -484,6 +521,8 @@ class PackedPlcore:
                       ert_eps: Optional[float] = None,
                       coarse_only: bool = False,
                       percell: bool = False,
+                      budget: Optional[int] = None,
+                      alive=None,
                       tracer=None, trace_attrs=None):
         """The pipelined executor's entry point: dispatch ONE coalesced
         ray tile and return ``(rgb, gather_cost)`` — ``rgb`` an
@@ -509,6 +548,9 @@ class PackedPlcore:
         so the executor can account per-cell stats."""
         use_percell = (percell and home_cell is not None
                        and self.shard_mesh is not None)
+        if use_percell and (budget is not None or alive is not None):
+            raise ValueError("adaptive budgets/masks are a replicated "
+                             "single-cell feature — not with percell")
         if tracer is not None:
             t0 = tracer.clock()
         if use_percell:
@@ -523,7 +565,8 @@ class PackedPlcore:
                     "stage_bytes": stage["bytes"] if staged_now else 0}
         else:
             rgb = self.render_tile(o_tile, d_tile, ert_eps=ert_eps,
-                                   coarse_only=coarse_only)
+                                   coarse_only=coarse_only,
+                                   budget=budget, alive=alive)
             cost = self.tile_gather_cost(home_cell)
         if tracer is not None:
             tracer.complete("plcore.dispatch", t0, cat="plcore",
@@ -535,3 +578,383 @@ class PackedPlcore:
                             gather_bytes=cost["bytes"],
                             **(trace_attrs or {}))
         return rgb, cost
+
+
+# ----------------------------------------------------------------- ASDR -----
+# Adaptive per-ray sample budgets + cross-ray trunk memoization. The host
+# side of the scheme lives here: a load-time coarse probe calibrates a
+# per-scene density grid (core.sampling.SampleStats), rays classify into
+# fine-sample budget classes from the stats along their frustum, and the
+# position-only trunk half of the coarse MLP is memoized per calibration
+# voxel (core.sampling.TrunkMemo) so provably-empty, fully-memo-resident
+# rays enter the fused two-pass kernel as DEAD rows — the existing ERT
+# prefix-compaction then skips their fine pass, so the saving shows up in
+# measured tile latency, not just in counters.
+
+_TRUNK_JITS: dict = {}
+_RECON_JITS: dict = {}
+
+
+def _trunk_rows_fn(cfg: NerfConfig):
+    """Compiled probe/memo program: positions (M, 3) -> f32 rows (M, 1+W)
+    of ``sigma|feat`` from the COARSE trunk. The exact trunk the render
+    paths run (same encoding, same quant slices), so a memoized row is
+    bit-identical to recomputing it at the same position."""
+    fn = _TRUNK_JITS.get(cfg)
+    if fn is None:
+        from repro.core.encoding import nerf_encoding
+        from repro.core.mlp import nerf_trunk_apply
+
+        def run(params_c, quant_c, pts):
+            cdt = jnp.dtype(cfg.compute_dtype)
+            pe = nerf_encoding(pts, cfg.pos_freqs).astype(cdt)
+            if cdt != jnp.float32:
+                params_c = jax.tree.map(lambda a: a.astype(cdt), params_c)
+            sigma, feat = nerf_trunk_apply(cfg, params_c, pe, quant=quant_c)
+            return jnp.concatenate(
+                [sigma[..., None].astype(jnp.float32),
+                 feat.astype(jnp.float32)], axis=-1)
+
+        fn = jax.jit(run)
+        _TRUNK_JITS[cfg] = fn
+    return fn
+
+
+def _recon_fn(cfg: NerfConfig):
+    """Compiled dead-row reconstruction: memoized trunk rows -> pixels.
+    Gathered ``sigma`` (R, C) / ``feat`` (R, C, W) rows feed the COARSE
+    color branch + VRU + white background — the coarse-only render of the
+    full pipeline with the trunk matmuls replaced by memo reads. Valid
+    for the rays it is applied to (provably-empty frustums: fine ~= coarse
+    ~= white background); the fig8 PSNR gate bounds the residual."""
+    fn = _RECON_JITS.get(cfg)
+    if fn is None:
+        from repro.core import sampling, volume
+        from repro.core.encoding import nerf_encoding
+        from repro.core.mlp import nerf_color_apply
+
+        def run(params_c, quant_c, sigma, feat, d_tile, t):
+            cdt = jnp.dtype(cfg.compute_dtype)
+            deltas = sampling.deltas_from_t(t, far_cap=1e10)
+            dirs = d_tile / jnp.linalg.norm(d_tile, axis=-1, keepdims=True)
+            pe_dir = nerf_encoding(dirs, cfg.dir_freqs).astype(cdt)[
+                ..., None, :]
+            if cdt != jnp.float32:
+                params_c = jax.tree.map(lambda a: a.astype(cdt), params_c)
+            rgb_s = nerf_color_apply(cfg, params_c, feat.astype(cdt),
+                                     pe_dir, quant=quant_c)
+            rgb, aux = volume.render_parallel(
+                sigma.astype(jnp.float32), rgb_s.astype(jnp.float32),
+                deltas)
+            return volume.white_background(rgb, aux["acc"])
+
+        fn = jax.jit(run)
+        _RECON_JITS[cfg] = fn
+    return fn
+
+
+def trunk_rows(pp: "PackedPlcore", pts: np.ndarray,
+               chunk: int = 2048) -> np.ndarray:
+    """Evaluate coarse-trunk ``sigma|feat`` rows at host positions
+    (M, 3) -> (M, 1+W) f32, through the fixed-shape compiled program in
+    padded chunks (one compiled shape regardless of M)."""
+    fn = _trunk_rows_fn(pp.cfg)
+    params_c = pp.params["coarse"]
+    quant_c = (pp.quant or {}).get("coarse")
+    pts = np.asarray(pts, np.float32)
+    out = []
+    for s in range(0, pts.shape[0], chunk):
+        blk = pts[s:s + chunk]
+        pad = chunk - blk.shape[0]
+        if pad:
+            blk = np.concatenate([blk, np.zeros((pad, 3), np.float32)])
+        rows = np.asarray(fn(params_c, quant_c, jnp.asarray(blk)))
+        out.append(rows[:chunk - pad] if pad else rows)
+    W = pp.cfg.trunk_width
+    return (np.concatenate(out) if out
+            else np.zeros((0, 1 + W), np.float32))
+
+
+def build_scene_aux(pp: "PackedPlcore", *, grid_res: int = 48,
+                    n_classes: int = 3, memo_mb: float = 32.0,
+                    probe_hw: int = 12, probe_radius: float = 4.0,
+                    empty_tau: float = 1e-2, n_probe_theta: int = 8,
+                    warm_memo: bool = True):
+    """Per-scene density calibration: the cheap coarse-only probe pass at
+    scene load. Renders no pixels — it evaluates the coarse TRUNK at the
+    deterministic coarse sample positions of a small spherical pose sweep
+    (the serving loadgen's pose distribution: theta 0..360, phi -35..-15,
+    radius 4) and accumulates max-sigma per calibration voxel into a
+    ``SampleStats`` record. Returns a ``sampling.SceneAux`` to store
+    alongside the PackedPlcore in the SceneCache entry.
+
+    ``warm_memo=True`` pre-fills the trunk memo with rows for the EMPTY
+    probed voxels (the only rows dead-row detection needs resident), up
+    to the memo's byte capacity; serve-time dispatches top up the rest.
+
+    Raises for sharded instances: the sharded PackedPlcore drops the
+    replicated raw trunk params this probe (and every memo fill) needs."""
+    if pp.shard_mesh is not None:
+        raise ValueError("adaptive sampling needs the replicated raw "
+                         "trunk params — a mesh-sharded PackedPlcore "
+                         "drops them at load")
+    from repro.core import sampling
+    from repro.data import rays as drays
+    cfg = pp.cfg
+    t_row = np.asarray(sampling.stratified(
+        cfg.near, cfg.far, cfg.n_coarse, (1,), None))[0].astype(np.float32)
+    os_, ds_ = [], []
+    for phi in (-35.0, -15.0):
+        for th in np.linspace(0.0, 360.0, n_probe_theta, endpoint=False):
+            c2w = drays.pose_spherical(float(th), float(phi), probe_radius)
+            o, d = drays.camera_rays(c2w, probe_hw, probe_hw,
+                                     0.9 * probe_hw)
+            os_.append(np.asarray(o).reshape(-1, 3))
+            ds_.append(np.asarray(d).reshape(-1, 3))
+    o = np.concatenate(os_).astype(np.float32)
+    d = np.concatenate(ds_).astype(np.float32)
+    pts = o[:, None, :] + t_row[None, :, None] * d[:, None, :]
+    rows = trunk_rows(pp, pts.reshape(-1, 3))
+    sigma = rows[:, 0].reshape(pts.shape[:2])
+    stats = sampling.build_sample_stats(
+        pts, sigma, grid_res=grid_res, n_classes=n_classes,
+        empty_tau=empty_tau)
+    memo = sampling.TrunkMemo(capacity_mb=memo_mb)
+    aux = sampling.SceneAux(stats=stats, memo=memo, t_row=t_row)
+    if warm_memo:
+        g = stats.grid.reshape(-1)
+        p = stats.probed.reshape(-1)
+        empty = np.nonzero(p & (g < stats.empty_tau))[0]
+        row_b = (1 + cfg.trunk_width) * 4 + 48
+        cap = max(0, memo.capacity_bytes // row_b)
+        empty = empty[:cap]
+        if empty.size:
+            centers = stats.voxel_centers(empty)
+            memo.insert("c", empty, trunk_rows(pp, centers))
+    return aux
+
+
+class AdaptiveRenderer:
+    """Adaptive Sample-budget Dispatch + tRunk memoization, per scene.
+
+    Wraps a (replicated, fused-kernel) PackedPlcore plus its SceneAux
+    and renders tiles three-tier:
+
+    * every ray classifies into a fine-sample budget class from the
+      calibration stats along its frustum (``classify_rays``); callers
+      coalesce rays by (scene, class) and dispatch each tile at its
+      class's ``n_fine`` budget — a per-budget compiled program;
+    * rays whose frustum is fully memo-resident AND provably empty enter
+      the fused kernel as DEAD rows: the kernel's ERT prefix-compaction
+      skips their fine pass, and their pixels are reconstructed from the
+      memoized trunk rows host-side (``_recon_fn`` — color branch + VRU
+      only, no trunk matmuls);
+    * a tile whose rays are ALL dead skips the kernel dispatch entirely.
+
+    Counters (``report()``) feed the engine's ``sampling`` stats block.
+    """
+
+    def __init__(self, pp: "PackedPlcore", aux, budgets=None, *,
+                 topup_voxels: int = 1024):
+        if pp.shard_mesh is not None:
+            raise ValueError("adaptive sampling requires replicated "
+                             "weights (no shard_mesh)")
+        if not (pp.use_kernel and pp.fuse_two_pass):
+            raise ValueError("adaptive sampling rides the fused two-pass "
+                             "kernel's dead-row compaction — build the "
+                             "PackedPlcore with use_kernel=True, "
+                             "fuse_two_pass=True")
+        from repro.core import sampling
+        self.pp = pp
+        self.aux = aux
+        self.budgets = (tuple(int(b) for b in budgets) if budgets
+                        else sampling.default_budget_classes(pp.cfg.n_fine))
+        self.topup_voxels = int(topup_voxels)
+        self.counters = {"tiles": 0, "rays": 0, "dead_rays": 0,
+                         "full_dead_tiles": 0, "skipped_fine_samples": 0,
+                         "topup_voxels": 0}
+        self.budget_tiles = {b: 0 for b in self.budgets}
+        self.budget_rays = {b: 0 for b in self.budgets}
+
+    # ------------------------------------------------------------- classify
+    def _frustum_pts(self, o: np.ndarray, d: np.ndarray) -> np.ndarray:
+        t = self.aux.t_row
+        return (o[:, None, :] + t[None, :, None] * d[:, None, :]).astype(
+            np.float32)
+
+    def classify_rays(self, o, d) -> np.ndarray:
+        """Rays (R, 3)x2 -> budget-class index (R,) into ``budgets``."""
+        o = np.asarray(o, np.float32)
+        d = np.asarray(d, np.float32)
+        return self.aux.stats.classify(self._frustum_pts(o, d),
+                                       self.budgets)
+
+    def dead_hint(self, o, d) -> np.ndarray:
+        """Stats-only provisional deadness (R,) bool: every frustum voxel
+        probed AND below empty_tau. Residency is NOT checked — the
+        per-tile top-up makes hinted rows resident at dispatch — so the
+        hint is cheap enough for schedulers to sort hinted-dead rays
+        FIRST within a budget bucket. That clusters them into tiles that
+        resolve fully dead and skip the kernel dispatch outright."""
+        o = np.asarray(o, np.float32)
+        d = np.asarray(d, np.float32)
+        return self.aux.stats.empty_mask(
+            self.aux.stats.voxel_ids(self._frustum_pts(o, d)))
+
+    # ------------------------------------------------------------- dead rows
+    def dead_and_rows(self, o: np.ndarray, d: np.ndarray):
+        """Per-tile dead-row resolution: top up the memo (capped), then
+        return (dead (R,) bool, vox (R, C) ids, sigma (R, C), feat
+        (R, C, W)) with the memoized rows gathered for dead rays (zeros
+        elsewhere). Hit/miss counters tick only for rows actually
+        consumed (the dead rays' lookups)."""
+        stats, memo = self.aux.stats, self.aux.memo
+        pts = self._frustum_pts(o, d)
+        vox = stats.voxel_ids(pts)
+        flat = np.unique(vox)
+        g = stats.grid.reshape(-1)[flat]
+        p = stats.probed.reshape(-1)[flat]
+        cand = flat[p & (g < stats.empty_tau)]
+        pinned = np.zeros(0, np.int64)
+        if cand.size:
+            # pin THIS tile's candidate rows (resident + about-to-insert)
+            # so the top-up's own LRU eviction can't drop rows the tile
+            # is about to consume — pins release once the rows are read
+            pinned = cand
+            memo.pin("c", pinned)
+            missing = cand[~memo.contains("c", cand)][:self.topup_voxels]
+            if missing.size:
+                rows = trunk_rows(self.pp, stats.voxel_centers(missing))
+                memo.insert("c", missing, rows)
+                self.counters["topup_voxels"] += int(missing.size)
+        resident = memo.contains("c", vox.reshape(-1)).reshape(vox.shape)
+        dead = resident.all(axis=1) & stats.empty_mask(vox)
+        R, C = vox.shape
+        W = self.pp.cfg.trunk_width
+        sigma = np.zeros((R, C), np.float32)
+        feat = np.zeros((R, C, W), np.float32)
+        idx = np.nonzero(dead)[0]
+        if idx.size:
+            hit, rows = memo.lookup("c", vox[idx].reshape(-1))
+            rows = rows.reshape(idx.size, C, 1 + W)
+            sigma[idx] = rows[..., 0]
+            feat[idx] = rows[..., 1:]
+        if pinned.size:
+            memo.unpin("c", pinned)
+        return dead, vox, sigma, feat
+
+    # -------------------------------------------------------------- render
+    def render_tile(self, o_tile, d_tile, budget: Optional[int] = None,
+                    ert_eps: Optional[float] = None,
+                    resolve_dead: bool = True):
+        """Render one (budget-pure) coalesced tile adaptively ->
+        (rgb (R, 3) device array, info dict). The kernel dispatch carries
+        the dead-row mask; dead pixels are overwritten by the memo
+        reconstruction; an all-dead tile never reaches the kernel.
+        ``resolve_dead=False`` skips the memo lookup outright — callers
+        that pre-sorted rays by ``dead_hint`` pass it for tiles whose
+        rays are all provably NON-empty (dead ⊆ hinted-dead, so the
+        resolution could only return all-False there)."""
+        o = np.asarray(o_tile, np.float32)
+        d = np.asarray(d_tile, np.float32)
+        R = o.shape[0]
+        b = int(budget) if budget is not None else int(self.budgets[-1])
+        if resolve_dead:
+            dead, vox, sigma, feat = self.dead_and_rows(o, d)
+        else:
+            dead = np.zeros(R, bool)
+            sigma = feat = None
+        n_dead = int(dead.sum())
+        info = {"rays": R, "dead": n_dead, "budget": b,
+                "full_dead": bool(n_dead == R),
+                "skipped_fine_samples": n_dead * b}
+        recon = None
+        if n_dead:
+            # memoized sigma rows that relu to EXACTLY zero composite to
+            # exactly the white background (w_i = 0, acc = 0) — the recon
+            # program would return all-ones bit-for-bit, so skip the
+            # dispatch outright. Only "tinted" empty space (sigma in
+            # (0, tau)) pays for the compiled reconstruction.
+            if bool((sigma[dead] <= 0.0).all()):
+                recon = np.ones((R, 3), np.float32)
+            else:
+                t = np.broadcast_to(self.aux.t_row,
+                                    (R, self.aux.t_row.size))
+                recon = _recon_fn(self.pp.cfg)(
+                    self.pp.params["coarse"],
+                    (self.pp.quant or {}).get("coarse"),
+                    jnp.asarray(sigma), jnp.asarray(feat),
+                    jnp.asarray(d), jnp.asarray(np.ascontiguousarray(t)))
+        if n_dead == R:
+            rgb = recon
+            self.counters["full_dead_tiles"] += 1
+        else:
+            alive = (jnp.asarray(~dead, jnp.float32)
+                     if n_dead else None)
+            rgb = self.pp.render_tile(jnp.asarray(o), jnp.asarray(d),
+                                      ert_eps=ert_eps, budget=b,
+                                      alive=alive)
+            if n_dead:
+                rgb = jnp.where(jnp.asarray(dead)[:, None], recon, rgb)
+        self.counters["tiles"] += 1
+        self.counters["rays"] += R
+        self.counters["dead_rays"] += n_dead
+        self.counters["skipped_fine_samples"] += info["skipped_fine_samples"]
+        self.budget_tiles[b] = self.budget_tiles.get(b, 0) + 1
+        self.budget_rays[b] = self.budget_rays.get(b, 0) + R
+        return rgb, info
+
+    def render_image(self, rays_o, rays_d, *,
+                     rays_per_tile: Optional[int] = None) -> np.ndarray:
+        """Full-image adaptive render: classify every ray, coalesce by
+        budget class into fixed-shape tiles (pad tail tiles by repeating
+        their last ray), dispatch each at its class budget, scatter the
+        pixels back. The benchmark/PSNR entry point."""
+        o = np.asarray(rays_o, np.float32)
+        d = np.asarray(rays_d, np.float32)
+        shape = o.shape[:-1]
+        o = o.reshape(-1, 3)
+        d = d.reshape(-1, 3)
+        rt = int(rays_per_tile or self.pp.cfg.rays_per_tile)
+        cls = self.classify_rays(o, d)
+        hint = self.dead_hint(o, d)
+        out = np.zeros((o.shape[0], 3), np.float32)
+        for c, b in enumerate(self.budgets):
+            idx = np.nonzero(cls == c)[0]
+            if not idx.size:
+                continue
+            # hinted-dead rays first: they pack into all-dead tiles that
+            # skip the kernel dispatch (stable, so output is deterministic)
+            idx = idx[np.argsort(~hint[idx], kind="stable")]
+            # minority classes shrink to the next power-of-two tile so a
+            # 6-ray class doesn't pad to a full ``rt`` dispatch; shapes
+            # stay canonical (bounded program-cache growth, <= 2x pad)
+            rt_c = (rt if idx.size >= rt
+                    else max(32, 1 << int(np.ceil(np.log2(idx.size)))))
+            for s in range(0, idx.size, rt_c):
+                span = idx[s:s + rt_c]
+                pad = rt_c - span.size
+                take = (np.concatenate([span, np.repeat(span[-1:], pad)])
+                        if pad else span)
+                rgb, _ = self.render_tile(
+                    o[take], d[take], budget=b,
+                    resolve_dead=bool(hint[take].any()))
+                out[span] = np.asarray(rgb)[:span.size]
+        return out.reshape(*shape, 3)
+
+    # ------------------------------------------------------------- reports
+    def report(self) -> dict:
+        """The ``sampling`` stats block: budget histogram + memo traffic
+        + dead-row/skipped-sample totals for this scene."""
+        c = dict(self.counters)
+        return {
+            **c,
+            "dead_ray_fraction": (round(c["dead_rays"] / c["rays"], 4)
+                                  if c["rays"] else 0.0),
+            "budgets": list(self.budgets),
+            "budget_tiles": {str(b): n for b, n in
+                             sorted(self.budget_tiles.items())},
+            "budget_rays": {str(b): n for b, n in
+                            sorted(self.budget_rays.items())},
+            "memo": self.aux.memo.stats(),
+        }

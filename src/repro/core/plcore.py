@@ -67,7 +67,7 @@ def render_rays(cfg: NerfConfig, params: dict, rays_o, rays_d,
                 quant: Optional[dict] = None, use_kernel: bool = False,
                 fuse_two_pass: bool = False,
                 packed: Optional[dict] = None, ert_eps: float = 0.0,
-                white_bkgd: bool = True) -> dict:
+                white_bkgd: bool = True, alive=None) -> dict:
     """Two-pass render (paper §5.1): n_coarse stratified + n_fine importance.
 
     rays_o/rays_d: (R, 3). Returns {rgb, rgb_coarse, depth, acc}.
@@ -83,6 +83,9 @@ def render_rays(cfg: NerfConfig, params: dict, rays_o, rays_d,
     coarse -> importance -> fine chain runs as ONE Pallas kernel per ray
     tile — coarse weights never leave VMEM, and with ert_eps > 0 the
     kernel compacts alive rays so mixed tiles also skip fine-MLP work.
+    ``alive`` (fuse_two_pass only): optional (R,) float mask of
+    externally-live rays — 0-rows (adaptive trunk-memo hits) enter the
+    fused kernel dead and its ERT compaction skips their fine pass.
     """
     R = rays_o.shape[:-1]
     k1 = k2 = None
@@ -92,6 +95,11 @@ def render_rays(cfg: NerfConfig, params: dict, rays_o, rays_d,
     qf = (quant or {}).get("fine")
     pc = (packed or {}).get("coarse")
     pf = (packed or {}).get("fine")
+
+    if alive is not None and not (use_kernel and fuse_two_pass):
+        raise ValueError("an external alive mask rides the fused two-pass "
+                         "kernel's compaction — pass use_kernel=True, "
+                         "fuse_two_pass=True")
 
     if use_kernel and fuse_two_pass:
         if key is not None:
@@ -103,7 +111,7 @@ def render_rays(cfg: NerfConfig, params: dict, rays_o, rays_d,
             pf = kops.stack_plcore_weights(cfg, params["fine"], qf)
         out = kops.fused_render_two_pass(
             cfg, {"coarse": pc, "fine": pf}, rays_o, rays_d,
-            ert_eps=ert_eps)
+            ert_eps=ert_eps, alive=alive)
         rgb_f, rgb_c = out["rgb"], out["rgb_coarse"]
         if white_bkgd:
             rgb_f = volume.white_background(rgb_f, out["acc"])

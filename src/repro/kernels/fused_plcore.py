@@ -287,12 +287,17 @@ def fused_plcore_call(cfg: NerfConfig, weights: dict, rays_o, rays_d, t,
 def _two_pass_tile(cfg: NerfConfig, rt: int, Nc: int, Nf: int,
                    P: int, P2: int, qc: bool, qf: bool,
                    ert_eps: float, chunk: int,
-                   o, d, t_row, cw_refs, fw_refs):
+                   o, d, t_row, cw_refs, fw_refs, m=None):
     """The two-pass tile body: coarse -> in-VMEM importance resample ->
     (ERT-compacted) fine -> composite, for one (rt,)-ray tile. Shared
     VERBATIM by the Pallas kernel (whose refs index like arrays) and the
     off-TPU lax.map grid emulator — the parity test in
     tests/test_two_pass_fused.py holds the two executors together.
+    ``m``: optional (rt,) float mask of externally-dead rows (trunk-memo
+    hits in the adaptive path): rows with m == 0 join the ERT-dead set,
+    so the SAME prefix compaction that skips terminated rays skips
+    memoized ones — their fine-pass cost vanishes from tile latency
+    (their outputs are overwritten host-side from the memo).
     Returns (rgb, rgb_coarse, acc, acc_coarse, depth)."""
     Nt = Nc + Nf
     o = o.astype(jnp.float32)                          # (rt, 3)
@@ -327,8 +332,13 @@ def _two_pass_tile(cfg: NerfConfig, rt: int, Nc: int, Nf: int,
             [r, (1.0 - Tn[:, -1])[:, None],
              jnp.sum(w * t_all, axis=-1)[:, None]], axis=-1)   # (rt, 5)
 
-    if ert_eps > 0.0:
-        alive = acc_c < 1.0 - ert_eps
+    if ert_eps > 0.0 or m is not None:
+        if ert_eps > 0.0:
+            alive = acc_c < 1.0 - ert_eps
+            if m is not None:
+                alive = jnp.logical_and(alive, m.astype(jnp.float32) > 0.0)
+        else:
+            alive = m.astype(jnp.float32) > 0.0
         af = alive.astype(jnp.float32)
         n_alive = jnp.sum(af).astype(jnp.int32)
 
@@ -394,17 +404,22 @@ def _two_pass_tile(cfg: NerfConfig, rt: int, Nc: int, Nf: int,
 
 def _make_two_pass_kernel(cfg: NerfConfig, rt: int, Nc: int, Nf: int,
                           P: int, P2: int, qc: bool, qf: bool,
-                          ert_eps: float, chunk: int):
+                          ert_eps: float, chunk: int,
+                          has_mask: bool = False):
     nwc = len(_weight_order(qc))
     nwf = len(_weight_order(qf))
 
     def kernel(o_ref, d_ref, tc_ref, *refs):
+        m = None
+        if has_mask:
+            m_ref, refs = refs[0], refs[1:]
+            m = m_ref[...]
         cw_refs = refs[:nwc]
         fw_refs = refs[nwc:nwc + nwf]
         rgb_o, rgbc_o, acc_o, accc_o, depth_o = refs[nwc + nwf:]
         rgb, rgb_c, acc, acc_c, depth = _two_pass_tile(
             cfg, rt, Nc, Nf, P, P2, qc, qf, ert_eps, chunk,
-            o_ref[...], d_ref[...], tc_ref[...], cw_refs, fw_refs)
+            o_ref[...], d_ref[...], tc_ref[...], cw_refs, fw_refs, m)
         rgb_o[...] = rgb.astype(rgb_o.dtype)
         rgbc_o[...] = rgb_c.astype(rgbc_o.dtype)
         acc_o[...] = acc.astype(acc_o.dtype)
@@ -417,7 +432,8 @@ def _make_two_pass_kernel(cfg: NerfConfig, rt: int, Nc: int, Nf: int,
 def two_pass_plcore_call(cfg: NerfConfig, packed_c: dict, packed_f: dict,
                          rays_o, rays_d, t_row, *, rt: int, ert_eps: float,
                          chunk: int, interpret: bool = True,
-                         emulate_grid: Optional[bool] = None):
+                         emulate_grid: Optional[bool] = None,
+                         alive=None):
     """ONE pallas_call per ray tile for the complete coarse -> importance
     -> fine chain. rays: (R, 3) with R % rt == 0; t_row: (1, n_coarse)
     deterministic coarse sample positions (identical for every ray —
@@ -433,13 +449,17 @@ def two_pass_plcore_call(cfg: NerfConfig, packed_c: dict, packed_f: dict,
     runtime-real. Force the Pallas interpreter with
     ``emulate_grid=False``.
 
+    ``alive``: optional (R,) float mask of externally-live rows (0 = the
+    adaptive path already has this ray's pixel memoized): dead rows join
+    the ERT compaction and skip the fine MLP.
+
     Returns (rgb (R,3), rgb_coarse (R,3), acc (R,), acc_coarse (R,),
     depth (R,)); the caller composites white background.
     """
     R = rays_o.shape[0]
     Nc = t_row.shape[-1]
     assert R % rt == 0, (R, rt)
-    assert ert_eps == 0.0 or rt % chunk == 0, (rt, chunk)
+    assert (ert_eps == 0.0 and alive is None) or rt % chunk == 0, (rt, chunk)
     P = -(-(cfg.trunk_width + cfg.pos_enc_dim) // 128) * 128
     P2 = -(-(cfg.trunk_width + cfg.dir_enc_dim) // 128) * 128
     qc = "trunk_mag" in packed_c
@@ -451,20 +471,31 @@ def two_pass_plcore_call(cfg: NerfConfig, packed_c: dict, packed_f: dict,
         emulate_grid = interpret
     if emulate_grid:
         def tile(od):
-            o_t, d_t = od
+            o_t, d_t, m_t = od
             return _two_pass_tile(cfg, rt, Nc, cfg.n_fine, P, P2, qc, qf,
                                   float(ert_eps), chunk,
-                                  o_t, d_t, t_row, wc, wf)
+                                  o_t, d_t, t_row, wc, wf, m_t)
+        m_full = (None if alive is None
+                  else alive.astype(jnp.float32).reshape(-1, rt))
         if R == rt:            # single-tile grid: no scan wrapper at all
-            return tile((rays_o, rays_d))
-        outs = jax.lax.map(tile, (rays_o.reshape(-1, rt, 3),
-                                  rays_d.reshape(-1, rt, 3)))
+            return tile((rays_o, rays_d,
+                         None if m_full is None else m_full[0]))
+        if alive is None:
+            def tile(od, _tile=tile):
+                o_t, d_t = od
+                return _tile((o_t, d_t, None))
+            outs = jax.lax.map(tile, (rays_o.reshape(-1, rt, 3),
+                                      rays_d.reshape(-1, rt, 3)))
+        else:
+            outs = jax.lax.map(tile, (rays_o.reshape(-1, rt, 3),
+                                      rays_d.reshape(-1, rt, 3), m_full))
         return tuple(x.reshape((R,) + x.shape[2:]) for x in outs)
 
     grid = (R // rt,)
     ray_spec = pl.BlockSpec((rt, 3), lambda i: (i, 0))
     pix_spec = pl.BlockSpec((rt, 3), lambda i: (i, 0))
     vec_spec = pl.BlockSpec((rt,), lambda i: (i,))
+    mask_spec = pl.BlockSpec((rt,), lambda i: (i,))
     out_shape = [jax.ShapeDtypeStruct((R, 3), jnp.float32),
                  jax.ShapeDtypeStruct((R, 3), jnp.float32),
                  jax.ShapeDtypeStruct((R,), jnp.float32),
@@ -472,14 +503,17 @@ def two_pass_plcore_call(cfg: NerfConfig, packed_c: dict, packed_f: dict,
                  jax.ShapeDtypeStruct((R,), jnp.float32)]
     out_specs = [pix_spec, pix_spec, vec_spec, vec_spec, vec_spec]
 
+    has_mask = alive is not None
+    mask_in = [alive.astype(jnp.float32)] if has_mask else []
     kernel = _make_two_pass_kernel(cfg, rt, Nc, cfg.n_fine, P, P2, qc, qf,
-                                   float(ert_eps), chunk)
+                                   float(ert_eps), chunk, has_mask)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[ray_spec, ray_spec, _pinned(t_row)]
+                 + ([mask_spec] if has_mask else [])
                  + [_pinned(a) for a in wc] + [_pinned(a) for a in wf],
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(rays_o, rays_d, t_row, *wc, *wf)
+    )(rays_o, rays_d, t_row, *mask_in, *wc, *wf)

@@ -320,7 +320,8 @@ def fused_render_two_pass(cfg: NerfConfig, packed: dict, rays_o, rays_d, *,
                           ert_eps: float = 0.0, rt: Optional[int] = None,
                           vmem_budget_bytes: Optional[int] = None,
                           interpret: Optional[bool] = None,
-                          emulate_grid: Optional[bool] = None) -> dict:
+                          emulate_grid: Optional[bool] = None,
+                          alive=None) -> dict:
     """The complete coarse -> importance -> fine render as ONE pallas_call
     per ray tile (deterministic/inference sampling; coarse weights never
     leave VMEM). ``packed``: {"coarse", "fine"} stack_plcore_weights
@@ -328,9 +329,11 @@ def fused_render_two_pass(cfg: NerfConfig, packed: dict, rays_o, rays_d, *,
     trunk layers first via runtime.sharding.gather_plcore_packed (the
     pipeline does this inside the same jitted program, so the gathers
     overlap the preceding compute). ``ert_eps`` > 0 enables per-ray
-    early-termination compaction inside the kernel. Returns {rgb,
-    rgb_coarse, acc, acc_coarse, depth}, each trimmed to R rays; white
-    background is the caller's composite.
+    early-termination compaction inside the kernel. ``alive``: optional
+    (R,) float mask — rows with 0 (adaptive trunk-memo hits) enter the
+    kernel dead and the ERT compaction skips their fine pass. Returns
+    {rgb, rgb_coarse, acc, acc_coarse, depth}, each trimmed to R rays;
+    white background is the caller's composite.
     """
     _DISPATCHES.inc()
     it = interpret_default() if interpret is None else interpret
@@ -349,12 +352,16 @@ def fused_render_two_pass(cfg: NerfConfig, packed: dict, rays_o, rays_d, *,
         padn = Rp - R
         rays_o = jnp.concatenate([rays_o, rays_o[-1:].repeat(padn, 0)])
         rays_d = jnp.concatenate([rays_d, rays_d[-1:].repeat(padn, 0)])
+        if alive is not None:
+            # padded rows enter dead: the compaction skips them for free
+            alive = jnp.concatenate(
+                [alive, jnp.zeros((padn,), alive.dtype)])
     # deterministic coarse samples are ray-independent: ship ONE row
     t_row = sampling.stratified(cfg.near, cfg.far, cfg.n_coarse, (1,), None)
     chunk = _ert_chunk(rt, cfg.ert_chunk_rows)
     rgb, rgb_c, acc, acc_c, depth = _fp.two_pass_plcore_call(
         cfg, packed["coarse"], packed["fine"], rays_o, rays_d, t_row,
         rt=rt, ert_eps=float(ert_eps), chunk=chunk, interpret=it,
-        emulate_grid=emulate_grid)
+        emulate_grid=emulate_grid, alive=alive)
     return {"rgb": rgb[:R], "rgb_coarse": rgb_c[:R], "acc": acc[:R],
             "acc_coarse": acc_c[:R], "depth": depth[:R]}

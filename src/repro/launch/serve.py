@@ -304,6 +304,29 @@ def serve_engine(args) -> dict:
     if args.percell_dispatch and not args.route_by_shard:
         raise SystemExit("--percell-dispatch executes tiles on their "
                          "routed home cell; it requires --route-by-shard")
+    budget_classes = None
+    if args.adaptive_sampling:
+        # ASDR rides the replicated fused-kernel single-cell single-host
+        # path: the probe/memo need the raw replicated trunk params, and
+        # the bit-identity gates need one engine's deterministic memo walk
+        if not (args.kernel and args.fuse_two_pass):
+            raise SystemExit("--adaptive-sampling rides the fused "
+                             "two-pass kernel's dead-row compaction; it "
+                             "requires --kernel --fuse-two-pass")
+        for flag, name in ((args.shard_weights, "--shard-weights"),
+                           (args.route_by_shard, "--route-by-shard"),
+                           (args.percell_dispatch, "--percell-dispatch"),
+                           (args.degrade_on_overload,
+                            "--degrade-on-overload"),
+                           (args.inject_faults, "--inject-faults"),
+                           (args.hosts > 1, "--hosts > 1")):
+            if flag:
+                raise SystemExit(f"--adaptive-sampling is a replicated "
+                                 f"single-host single-cell feature — "
+                                 f"incompatible with {name}")
+        if args.budget_classes != "auto":
+            budget_classes = tuple(
+                int(b) for b in args.budget_classes.split(","))
     if args.hosts < 1:
         raise SystemExit(f"--hosts must be >= 1, got {args.hosts}")
     host_events = _parse_host_events(args)
@@ -333,6 +356,13 @@ def serve_engine(args) -> dict:
             params = init_params(plcore_decls(cfg),
                                  jax.random.PRNGKey(args.seed + idx),
                                  "float32")
+            if args.scene_bias:
+                # shift the sigma-head bias: negative values carve real
+                # empty space into the synthetic scenes (the canonical
+                # mixed scene for the adaptive-sampling gates is -0.5)
+                for net in params:
+                    params[net]["sigma"]["b"] = (
+                        params[net]["sigma"]["b"] + args.scene_bias)
             quant = None
             if args.rmcm:
                 quant = {"coarse": rmcm.quantize_tree(params["coarse"]),
@@ -361,13 +391,15 @@ def serve_engine(args) -> dict:
         tracer = SpanTracer(sample_every=args.trace_sample)
 
     def make_engine(depth, routed, *, chaos=False, use_cache=None,
-                    percell=False):
+                    percell=False, adaptive=None):
         # reference reruns are always CLEAN and SINGLE-HOST: no fault
         # plan (reusing the primary plan would continue its RNG streams,
         # not replay them), a fresh cache with the unwrapped loader, no
         # host pool — and always SPMD (percell=False), the bit-identity
         # anchor every multi-host/faulted/per-cell run is compared
         # against
+        if adaptive is None:
+            adaptive = args.adaptive_sampling
         kw = dict(tile_rays=args.tile_rays, pipeline_depth=depth,
                   route_by_shard=routed, percell_dispatch=percell,
                   max_queue=args.max_queue,
@@ -375,6 +407,13 @@ def serve_engine(args) -> dict:
                   faults=plan if chaos else None,
                   tile_service_prior_s=prior_s,
                   tracer=tracer if chaos else None)
+        if adaptive:
+            # adaptive kwargs only when armed: ClusterEngine (hosts > 1,
+            # incompatible anyway) never sees them, and an adaptive-off
+            # engine is constructed EXACTLY like the pre-ASDR one
+            kw.update(adaptive_sampling=True,
+                      budget_classes=budget_classes,
+                      memo_mb=args.memo_mb)
         if chaos and args.hosts > 1:
             caches = [SceneCache(plan.wrap_loader(make_loader(m))
                                  if plan else make_loader(m),
@@ -446,6 +485,9 @@ def serve_engine(args) -> dict:
                                                         cfg.trunk_layers)
     if args.percell_dispatch:
         stats["percell"] = engine.percell_report()
+    if args.adaptive_sampling:
+        stats["adaptive_sampling"] = True
+        stats["sampling"] = engine.sampling_report()
     print(json.dumps(stats, indent=2))
     if args.check:
         if stats["requests_completed"] != args.requests:
@@ -453,7 +495,12 @@ def serve_engine(args) -> dict:
                              f"/{args.requests} requests completed")
         if stats["cache"]["hit_rate"] <= 0.0:
             raise SystemExit("engine check: scene-cache hit rate is 0")
-        if stats["dispatch_savings"] < 0:
+        if stats["dispatch_savings"] < 0 and not args.adaptive_sampling:
+            # budget bucketing deliberately splits a request's rays
+            # across per-class tiles, so under --adaptive-sampling the
+            # dispatch COUNT may exceed the per-request baseline — the
+            # adaptive figure of merit is skipped fine samples (gated
+            # below), not tile count
             raise SystemExit("engine check: coalescing issued MORE "
                              "dispatches than the per-request baseline")
         if trace_integrity is not None:
@@ -596,6 +643,55 @@ def serve_engine(args) -> dict:
                         f"engine check: --percell-dispatch with "
                         f"{args.scenes} scenes on {n_cells} cells engaged "
                         f"only cells {engaged} — no cross-cell concurrency")
+        if args.adaptive_sampling:
+            # adaptive gates: every tile went through the adaptive path,
+            # the trunk memo actually served hits, every budget class was
+            # exercised by real rays, and an adaptive-OFF rerun of the
+            # same trace is bit-identical to the synchronous current
+            # pipeline — the flag off must change NOTHING
+            sp = stats["sampling"]
+            if sp["adaptive_tiles"] < 1:
+                raise SystemExit("engine check: --adaptive-sampling armed "
+                                 "but no tile took the adaptive path")
+            if sp["memo_hits"] < 1:
+                raise SystemExit("engine check: adaptive sampling served "
+                                 "zero trunk-memo hits — memoization "
+                                 "never engaged")
+            exercised = set()
+            n_classes = 0
+            for r in sp["scenes"].values():
+                n_classes = max(n_classes, len(r["budgets"]))
+                exercised |= {b for b, n in r["budget_rays"].items()
+                              if n > 0}
+            if len(exercised) < n_classes:
+                raise SystemExit(
+                    f"engine check: only budget classes "
+                    f"{sorted(exercised, key=int)} of {n_classes} "
+                    f"exercised — the calibration edges starve classes "
+                    f"(is --scene-bias set for a mixed scene?)")
+            off1 = make_engine(args.pipeline_depth, args.route_by_shard,
+                               adaptive=False)
+            loadgen.run_trace(off1, trace, mode=args.loop,
+                              concurrency=args.concurrency)
+            off2 = make_engine(1, args.route_by_shard, adaptive=False)
+            loadgen.run_trace(off2, trace, mode=args.loop,
+                              concurrency=args.concurrency)
+            n_cmp = 0
+            for rid, res in off1.completed.items():
+                if res.status != "ok":
+                    continue
+                r2 = off2.completed.get(rid)
+                if r2 is None or r2.status != "ok":
+                    continue
+                n_cmp += 1
+                if not np.array_equal(res.image, r2.image):
+                    raise SystemExit(
+                        f"engine check: adaptive-off image for request "
+                        f"{rid} differs from the synchronous current-"
+                        f"pipeline reference — the OFF path regressed")
+            if n_cmp == 0:
+                raise SystemExit("engine check: no ok-status requests to "
+                                 "compare for the adaptive-off gate")
         print("engine check OK")
     return stats
 
@@ -720,6 +816,27 @@ def build_parser():
                          "in-flight budget is counted per cell, so "
                          "different cells execute different scenes' tiles "
                          "concurrently (bit-identical to the SPMD path)")
+    ap.add_argument("--adaptive-sampling", action="store_true",
+                    help="ASDR: per-scene density calibration probe at "
+                         "scene load, per-ray fine-sample budget classes "
+                         "(tiles coalesce (scene, budget)-pure), and a "
+                         "cross-ray trunk memo whose fully-empty resident "
+                         "rays enter the fused kernel as dead rows "
+                         "(requires --kernel --fuse-two-pass; replicated "
+                         "single-host single-cell only)")
+    ap.add_argument("--budget-classes", default="auto", metavar="N,N,N",
+                    help="comma list of ascending fine-sample budgets for "
+                         "the adaptive classes (default 'auto': derived "
+                         "from the config's n_fine, e.g. 8,32,64 for 128)")
+    ap.add_argument("--memo-mb", type=float, default=32.0,
+                    help="per-scene trunk-memo capacity (MB, LRU; an "
+                         "auxiliary resident of the scene's cache entry "
+                         "counted against --cache-mb)")
+    ap.add_argument("--scene-bias", type=float, default=0.0,
+                    help="shift every synthetic scene's sigma-head bias; "
+                         "negative values carve real empty space (the "
+                         "canonical mixed scene for adaptive gates is "
+                         "-0.5)")
     ap.add_argument("--hw-mix", default="16,32",
                     help="comma list of request resolutions")
     ap.add_argument("--priority-mix", default="0",

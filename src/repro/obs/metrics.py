@@ -48,8 +48,8 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "MetricFamily", "MetricsRegistry",
     "StatsView", "log_buckets", "global_registry", "engine_stats_view",
     "extend_stats_view", "ENGINE_STATS_SCHEMA", "CLUSTER_STATS_SCHEMA",
-    "PERCELL_STATS_SCHEMA", "EngineMetrics", "TIME_BUCKETS",
-    "DEPTH_BUCKETS",
+    "PERCELL_STATS_SCHEMA", "SAMPLING_STATS_SCHEMA", "EngineMetrics",
+    "TIME_BUCKETS", "DEPTH_BUCKETS",
 ]
 
 
@@ -311,6 +311,32 @@ PERCELL_STATS_SCHEMA = (
      "distinct cells that have executed a tile"),
 )
 
+# Adaptive-sampling extension (PR 10): bound via ``extend_stats_view``
+# ONLY when an engine runs with ``adaptive_sampling`` — same
+# byte-compat rationale as PERCELL_STATS_SCHEMA. The gauge key
+# ``dead_ray_fraction`` exports as ``engine_dead_ray_fraction``.
+SAMPLING_STATS_SCHEMA = (
+    ("adaptive_tiles", "counter", 0,
+     "tiles dispatched through the adaptive (budget-bucketed) path"),
+    ("full_dead_tiles", "counter", 0,
+     "all-dead tiles resolved from the trunk memo without a kernel "
+     "dispatch"),
+    ("dead_rays", "counter", 0,
+     "rays entering the fused kernel as dead rows (memo-resident, "
+     "provably-empty frustums)"),
+    ("skipped_fine_samples", "counter", 0,
+     "fine-MLP samples skipped by dead rows at the tile's budget"),
+    ("memo_topup_voxels", "counter", 0,
+     "trunk rows computed by per-dispatch memo top-ups"),
+    ("memo_hits", "counter", 0, "trunk-memo row lookups served"),
+    ("memo_misses", "counter", 0, "trunk-memo row lookups missed"),
+    ("memo_evictions", "counter", 0, "trunk-memo LRU evictions"),
+    ("dead_ray_fraction", "gauge", 0.0,
+     "dead rows / dispatched rays, cumulative over the run"),
+    ("memo_resident_mb", "gauge", 0.0,
+     "live trunk-memo bytes across resident scenes"),
+)
+
 
 class _StatusCounts(dict):
     """The nested ``status_counts`` dict, backed by a labeled counter
@@ -428,6 +454,15 @@ class EngineMetrics:
         self.cell_max_in_flight = registry.gauge(
             f"{prefix}_cell_max_in_flight_tiles",
             "peak executor slot occupancy per home cell")
+        # labeled per-budget-class families (adaptive-sampling runs):
+        # the budget histogram behind stats["sampling"], exported as
+        # {budget_class=...} children through the same Prometheus path
+        self.budget_tiles = registry.counter(
+            f"{prefix}_budget_tiles_total",
+            "tiles dispatched per fine-sample budget class")
+        self.budget_rays = registry.counter(
+            f"{prefix}_budget_rays_total",
+            "rays dispatched per fine-sample budget class")
 
 
 def engine_stats_view(registry: MetricsRegistry) -> StatsView:

@@ -152,12 +152,18 @@ class RenderResult:
 
 
 class _Active:
-    """Queue entry: request + flattened rays + framebuffer + cursors."""
+    """Queue entry: request + flattened rays + framebuffer + cursors.
+    Under adaptive sampling the single ``next_ray`` cursor is joined by
+    per-budget-class index lists (``bucket_idx``/``bucket_next``): rays
+    are handed out bucket-by-bucket so tiles stay (scene, budget)-pure,
+    while ``next_ray`` keeps counting TOTAL handed-out rays so
+    ``remaining`` and the admission math are bucket-agnostic."""
     __slots__ = ("req", "rid", "seq", "rays_o", "rays_d", "fb",
                  "next_ray", "n_done", "n_rays", "submit_s",
                  "service_start_s", "deadline_abs", "terminal",
                  "degraded", "retries", "fallbacks",
-                 "dispatches_at_submit", "trace_span")
+                 "dispatches_at_submit", "trace_span",
+                 "bucket_idx", "bucket_next")
 
     def __init__(self, req: RenderRequest, rid: int, seq: int, now: float):
         self.req, self.rid, self.seq, self.submit_s = req, rid, seq, now
@@ -180,6 +186,8 @@ class _Active:
         self.fallbacks = 0
         self.dispatches_at_submit = 0   # priority-aging anchor
         self.trace_span = None          # open request-lifecycle span
+        self.bucket_idx = None          # per-budget-class ray index lists
+        self.bucket_next = None         # per-class hand-out cursors
 
     @property
     def remaining(self) -> int:
@@ -197,15 +205,101 @@ class _Tile:
     host is the cross-host failover the cluster counts."""
     scene_id: str
     pp: object                              # resident PackedPlcore
-    spans: List[tuple]                      # (_Active, start, take)
+    spans: List[tuple]                      # (_Active, start | idx, take):
+    #                                         ``start`` int = contiguous
+    #                                         span; ndarray = per-ray
+    #                                         indices (adaptive buckets)
     rays_o: np.ndarray
     rays_d: np.ndarray
     n_real: int                             # non-pad rays
     home_cell: Optional[int] = None         # shard-locality routing
     degraded: bool = False                  # coarse-only program
+    budget: Optional[int] = None            # adaptive fine-sample budget
+    dead_bucket: bool = False               # rays all hinted-dead: memo
+    #                                         recon path, kernel skipped
     host_id: Optional[int] = None           # cluster placement
     prev_host: Optional[int] = None         # last host that dispatched it
     tid: int = -1                           # deterministic trace id
+
+
+# ---------------------------------------------------------------------------
+class AdaptiveSampling:
+    """ASDR coordinator shared by scheduler and executor: per-scene
+    ``core.pipeline.AdaptiveRenderer`` instances riding the SceneCache.
+
+    The first touch of a scene runs the density-calibration probe
+    (``build_scene_aux``) through ``SceneCache.ensure_aux`` — the
+    SampleStats + trunk memo become auxiliary residents of the scene's
+    cache entry, byte-accounted and evicted WITH it. A renderer is
+    rebuilt whenever the resident ``PackedPlcore`` object changed
+    (eviction + reload dropped the old aux alongside the old weights),
+    so stale stats can never classify rays for fresh weights."""
+
+    def __init__(self, cache: SceneCache, *, budgets=None,
+                 memo_mb: float = 32.0, grid_res: int = 32,
+                 probe_hw: int = 8):
+        self.cache = cache
+        self.budgets = tuple(int(b) for b in budgets) if budgets else None
+        self.memo_mb = float(memo_mb)
+        self.grid_res = int(grid_res)
+        self.probe_hw = int(probe_hw)
+        self._renderers: Dict[str, object] = {}
+
+    def renderer(self, scene_id: str, pp):
+        """The scene's AdaptiveRenderer; probes + builds on first touch
+        (the scene is already resident — the scheduler's ``cache.get``
+        ran) and rebuilds after a reload."""
+        ar = self._renderers.get(scene_id)
+        if ar is not None and ar.pp is pp:
+            return ar
+        from repro.core import pipeline as P
+        n_classes = len(self.budgets) if self.budgets else 3
+        aux = self.cache.ensure_aux(
+            scene_id,
+            lambda p: P.build_scene_aux(
+                p, grid_res=self.grid_res, n_classes=n_classes,
+                memo_mb=self.memo_mb, probe_hw=self.probe_hw))
+        ar = P.AdaptiveRenderer(pp, aux, self.budgets)
+        self._renderers[scene_id] = ar
+        return ar
+
+    def account(self, tile: "_Tile", info: dict, stats: dict) -> None:
+        """Fold one adaptive dispatch's info into the engine stats block
+        (schema keys from ``SAMPLING_STATS_SCHEMA``) and the labeled
+        metric families."""
+        stats["adaptive_tiles"] += 1
+        stats["dead_rays"] += info["dead"]
+        stats["skipped_fine_samples"] += info["skipped_fine_samples"]
+        if info["full_dead"]:
+            stats["full_dead_tiles"] += 1
+        hits = misses = evs = topup = rays = dead = 0
+        resident = 0.0
+        for ar in self._renderers.values():
+            ms = ar.aux.memo.stats()
+            hits += ms["hits"]
+            misses += ms["misses"]
+            evs += ms["evictions"]
+            resident += ms["resident_mb"]
+            topup += ar.counters["topup_voxels"]
+            rays += ar.counters["rays"]
+            dead += ar.counters["dead_rays"]
+        stats["memo_hits"] = hits
+        stats["memo_misses"] = misses
+        stats["memo_evictions"] = evs
+        stats["memo_topup_voxels"] = topup
+        stats["memo_resident_mb"] = round(resident, 3)
+        stats["dead_ray_fraction"] = round(dead / rays, 4) if rays else 0.0
+        m = getattr(stats, "m", None)
+        if m is not None:
+            m.budget_tiles.labels(budget_class=info["budget"]).inc()
+            m.budget_rays.labels(budget_class=info["budget"]).inc(
+                info["rays"])
+
+    def report(self) -> dict:
+        """Per-scene ``sampling`` blocks (budget histograms + memo
+        traffic) keyed by scene id."""
+        return {sid: ar.report()
+                for sid, ar in sorted(self._renderers.items())}
 
 
 # ---------------------------------------------------------------------------
@@ -228,8 +322,13 @@ class TileScheduler:
                  degrade_max_priority: int = 0,
                  max_load_failures: int = 3,
                  tile_service_prior_s: Optional[float] = None,
+                 adaptive: "Optional[AdaptiveSampling]" = None,
                  tracer=None):
         self.cache = cache
+        # adaptive sampling (PR 10): rays classify into fine-sample
+        # budget classes and tiles coalesce (scene, budget)-pure — the
+        # same purity rule the degraded/full mode split already enforces
+        self.adaptive = adaptive
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.tile_rays = int(tile_rays)
         # stickiness bound: after this many consecutive tiles for one
@@ -477,23 +576,78 @@ class TileScheduler:
         # rays can't share a dispatch program, so coalesce only requests
         # matching the best-ranked candidate's mode
         degraded = scene_cands[0].degraded
+        # ... and under adaptive sampling BUDGET-pure: every ray in the
+        # tile renders at one budget class's n_fine, so the fixed-shape
+        # per-budget program is reused and no ray is over/under-sampled
+        # by its tile-mates. Classification is lazy (first coalesce touch
+        # of each request — the scene's calibration stats are resident by
+        # then); the bucket served is the best-ranked candidate's first
+        # non-exhausted class.
+        bucket = budget = None
+        if self.adaptive is not None and not degraded:
+            ar = self.adaptive.renderer(scene, pp)
+            for a in scene_cands:
+                if a.bucket_idx is None:
+                    cls = ar.classify_rays(a.rays_o, a.rays_d)
+                    hint = ar.dead_hint(a.rays_o, a.rays_d)
+                    # hinted-dead rays (provably empty from the stats —
+                    # always class 0, since their score is below the
+                    # first quantile edge) get a dedicated extra bucket:
+                    # coalesced across requests they form tiles that
+                    # resolve fully dead at the executor and skip the
+                    # kernel dispatch entirely
+                    a.bucket_idx = [np.nonzero((cls == c) & ~hint)[0]
+                                    for c in range(len(ar.budgets))]
+                    a.bucket_idx.append(np.nonzero(hint)[0])
+                    a.bucket_next = [0] * len(a.bucket_idx)
+            a0 = scene_cands[0]
+            bucket = next(c for c in range(len(a0.bucket_idx))
+                          if len(a0.bucket_idx[c]) > a0.bucket_next[c])
+            # the dead bucket renders at the lowest budget — its rays are
+            # all class 0, and any that resolve alive (memo top-up cap)
+            # render in-kernel at exactly their class's n_fine
+            budget = int(ar.budgets[min(bucket, len(ar.budgets) - 1)]
+                         if bucket < len(ar.budgets) else ar.budgets[0])
         spans, chunks_o, chunks_d, n = [], [], [], 0
         for a in scene_cands:
             if a.degraded != degraded:
                 continue
-            take = min(a.remaining, self.tile_rays - n)
-            if take <= 0:
-                continue
-            if a.service_start_s is None:
-                a.service_start_s = now
-            spans.append((a, a.next_ray, take))
-            chunks_o.append(a.rays_o[a.next_ray:a.next_ray + take])
-            chunks_d.append(a.rays_d[a.next_ray:a.next_ray + take])
+            if bucket is not None:
+                avail = a.bucket_idx[bucket]
+                cur = a.bucket_next[bucket]
+                take = min(len(avail) - cur, self.tile_rays - n)
+                if take <= 0:
+                    continue
+                idx = avail[cur:cur + take]
+                if a.service_start_s is None:
+                    a.service_start_s = now
+                spans.append((a, idx, take))
+                chunks_o.append(a.rays_o[idx])
+                chunks_d.append(a.rays_d[idx])
+                a.bucket_next[bucket] = cur + take
+            else:
+                take = min(a.remaining, self.tile_rays - n)
+                if take <= 0:
+                    continue
+                if a.service_start_s is None:
+                    a.service_start_s = now
+                spans.append((a, a.next_ray, take))
+                chunks_o.append(a.rays_o[a.next_ray:a.next_ray + take])
+                chunks_d.append(a.rays_d[a.next_ray:a.next_ray + take])
             a.next_ray += take
             n += take
             if n == self.tile_rays:
                 break
-        pad = self.tile_rays - n
+        # adaptive bucket tiles SHRINK to the next power of two when the
+        # bucket drained below tile_rays: a 40-ray minority class must
+        # not pad out to a full-size kernel dispatch. Shapes stay
+        # canonical (pow2 in [32, tile_rays]) so the per-budget program
+        # cache stays bounded; the static path keeps fixed-size tiles.
+        target = self.tile_rays
+        if bucket is not None and n < target:
+            target = min(target,
+                         max(32, 1 << int(np.ceil(np.log2(max(n, 2))))))
+        pad = target - n
         if pad:                       # tail tile: repeat the last real ray
             chunks_o.append(np.repeat(chunks_o[-1][-1:], pad, axis=0))
             chunks_d.append(np.repeat(chunks_d[-1][-1:], pad, axis=0))
@@ -503,12 +657,16 @@ class TileScheduler:
         tile = _Tile(scene, pp, spans, np.concatenate(chunks_o),
                      np.concatenate(chunks_d), n,
                      home_cell=self._route(scene, pp), degraded=degraded,
+                     budget=budget,
+                     dead_bucket=(bucket is not None
+                                  and bucket >= len(ar.budgets)),
                      host_id=host_id, tid=tid)
         tr = self.tracer
         if tr.enabled:
             tr.complete("tile.coalesce", t_coalesce0, cat="tile", tile=tid,
                         scene=scene, rays=n, pad=pad, requests=len(spans),
-                        host=host_id, degraded=degraded)
+                        host=host_id, degraded=degraded,
+                        budget_class=budget)
         m = getattr(self.stats, "m", None)
         if m is not None:
             m.coalesce_seconds.observe(self._clock() - t_coalesce0)
@@ -544,7 +702,8 @@ class TileExecutor:
                  max_retry_backoff_s: float = 0.05,
                  check_finite: bool = True, clock=time.perf_counter,
                  sleep=time.sleep, redispatch_hook=None, tracer=None,
-                 percell: bool = False):
+                 percell: bool = False,
+                 adaptive: "Optional[AdaptiveSampling]" = None):
         if depth < 1:
             raise ValueError(f"pipeline depth must be >= 1, got {depth}")
         self.completion = completion
@@ -560,6 +719,10 @@ class TileExecutor:
         # two cells genuinely hold different scenes' tiles concurrently
         # instead of the whole mesh serializing over one slot ring
         self.percell = bool(percell)
+        # adaptive sampling (PR 10): budget-stamped tiles route through
+        # the scene's AdaptiveRenderer (budgeted n_fine + memo-dead rays)
+        # instead of the static full-budget dispatch
+        self.adaptive = adaptive
         self.cell_stats: Dict[Optional[int], dict] = {}
         # cluster failover: tried BEFORE the local retry ladder — a tile
         # that failed here is first offered to a DIFFERENT host; only
@@ -589,6 +752,24 @@ class TileExecutor:
             raise InjectedDispatchError(
                 f"injected dispatch failure (tile scene={tile.scene_id})")
         tr = self.tracer
+        if tile.budget is not None and self.adaptive is not None:
+            # adaptive path: budget-stamped tile renders at its class's
+            # n_fine with memo-dead rays masked out of the fused kernel;
+            # gather cost matches the static path (same packed weights)
+            ar = self.adaptive.renderer(tile.scene_id, tile.pp)
+            rgb, info = ar.render_tile(tile.rays_o, tile.rays_d,
+                                       budget=tile.budget,
+                                       resolve_dead=tile.dead_bucket)
+            self.adaptive.account(tile, info, self.stats)
+            if tr.enabled:
+                tr.event("tile.adaptive", cat="tile", tile=tile.tid,
+                         host=tile.host_id, budget_class=tile.budget,
+                         dead=info["dead"], full_dead=info["full_dead"])
+            cost = tile.pp.tile_gather_cost(tile.home_cell)
+            extra = (fault["extra_s"]
+                     if fault is not None and fault["kind"] == "straggle"
+                     else 0.0)
+            return rgb, cost, extra
         rgb, cost = tile.pp.dispatch_tile(
             jnp.asarray(tile.rays_o), jnp.asarray(tile.rays_d),
             home_cell=tile.home_cell, coarse_only=tile.degraded,
@@ -903,7 +1084,12 @@ class CompletionSink:
                 late += take
                 off += take
                 continue
-            a.fb[start:start + take] = rgb[off:off + take]
+            if isinstance(start, np.ndarray):
+                # budget-bucketed tile: this span is a gather of the
+                # request's rays for ONE class, scattered by index
+                a.fb[start] = rgb[off:off + take]
+            else:
+                a.fb[start:start + take] = rgb[off:off + take]
             a.n_done += take
             off += take
             if a.n_done == a.n_rays:
@@ -1020,10 +1206,29 @@ class RenderEngine:
                  straggler_cfg=None,
                  check_finite: bool = True,
                  tile_service_prior_s: Optional[float] = None,
+                 adaptive_sampling: bool = False,
+                 budget_classes=None,
+                 memo_mb: float = 32.0,
+                 adaptive_grid_res: int = 32,
+                 adaptive_probe_hw: int = 8,
                  tracer=None, registry=None):
         if percell_dispatch and not route_by_shard:
             raise ValueError("percell_dispatch executes tiles on their "
                              "routed home cell — pass route_by_shard=True")
+        if adaptive_sampling:
+            # ASDR rides the replicated fused-kernel single-cell path:
+            # sharded residency drops the raw trunk params the probe and
+            # memo need, per-cell/routed dispatch would multiply the
+            # per-budget program cache across cells, and overload
+            # degradation already rewrites the sample budget its own way
+            if route_by_shard or percell_dispatch:
+                raise ValueError("adaptive_sampling is a replicated "
+                                 "single-cell feature — incompatible with "
+                                 "route_by_shard / percell_dispatch")
+            if degrade_on_overload:
+                raise ValueError("adaptive_sampling and "
+                                 "degrade_on_overload both rewrite the "
+                                 "per-ray sample budget — arm one")
         self.cache = cache
         self.faults = faults
         self._clock = clock
@@ -1043,6 +1248,15 @@ class RenderEngine:
             from repro.obs.metrics import (PERCELL_STATS_SCHEMA,
                                            extend_stats_view)
             extend_stats_view(self.stats, PERCELL_STATS_SCHEMA)
+        self.adaptive: Optional[AdaptiveSampling] = None
+        if adaptive_sampling:
+            # sampling extension block — same bind-only-when-armed rule
+            from repro.obs.metrics import (SAMPLING_STATS_SCHEMA,
+                                           extend_stats_view)
+            extend_stats_view(self.stats, SAMPLING_STATS_SCHEMA)
+            self.adaptive = AdaptiveSampling(
+                cache, budgets=budget_classes, memo_mb=memo_mb,
+                grid_res=adaptive_grid_res, probe_hw=adaptive_probe_hw)
         cache.tracer = self.tracer
         self.scheduler = TileScheduler(
             cache, tile_rays=tile_rays, max_sticky_tiles=max_sticky_tiles,
@@ -1052,7 +1266,8 @@ class RenderEngine:
             degrade_queue_tiles=degrade_queue_tiles,
             degrade_max_priority=degrade_max_priority,
             max_load_failures=max_load_failures,
-            tile_service_prior_s=tile_service_prior_s, tracer=self.tracer)
+            tile_service_prior_s=tile_service_prior_s,
+            adaptive=self.adaptive, tracer=self.tracer)
         self.completion = CompletionSink(self.scheduler, self.stats, clock,
                                          check_finite=check_finite,
                                          tracer=self.tracer)
@@ -1072,7 +1287,7 @@ class RenderEngine:
             max_tile_retries=max_tile_retries,
             retry_backoff_s=retry_backoff_s,
             check_finite=check_finite, clock=clock, tracer=self.tracer,
-            percell=percell_dispatch)
+            percell=percell_dispatch, adaptive=self.adaptive)
         # admission control needs the in-flight count; termination needs
         # the sink — wire the cross-layer references the façade owns
         self.scheduler.completion = self.completion
@@ -1199,4 +1414,27 @@ class RenderEngine:
             "stage_layers": st["percell_stage_layers"],
             "stage_bytes": st["percell_stage_bytes"],
             "cells_active": st["percell_cells_active"],
+        }
+
+    def sampling_report(self) -> Optional[dict]:
+        """Adaptive-sampling summary (``None`` unless the engine runs
+        with ``adaptive_sampling``): the engine-wide totals from the
+        sampling stats block plus per-scene budget histograms and memo
+        traffic — what the bench's ``serving.adaptive`` block and
+        serve.py's ``--check`` sampling gates persist."""
+        if self.adaptive is None:
+            return None
+        st = self.stats
+        return {
+            "adaptive_tiles": st["adaptive_tiles"],
+            "full_dead_tiles": st["full_dead_tiles"],
+            "dead_rays": st["dead_rays"],
+            "dead_ray_fraction": st["dead_ray_fraction"],
+            "skipped_fine_samples": st["skipped_fine_samples"],
+            "memo_hits": st["memo_hits"],
+            "memo_misses": st["memo_misses"],
+            "memo_evictions": st["memo_evictions"],
+            "memo_topup_voxels": st["memo_topup_voxels"],
+            "memo_resident_mb": st["memo_resident_mb"],
+            "scenes": self.adaptive.report(),
         }

@@ -11,6 +11,11 @@ scene-grouped batching keeps touches clustered so residency is long.
 
 Capacity is in MB of actual array bytes (params + quant + packed kernel
 layout), not entry count — the quantity that competes for device memory.
+Auxiliary per-scene residents (the adaptive-sampling ``SceneAux``:
+calibration stats + trunk memo, attached via ``ensure_aux``) count
+against the SAME budget at their LIVE size — the memo grows during
+serving, so eviction decisions re-read ``aux.nbytes`` instead of a
+stale at-insert figure. An evicted scene drops its aux with it.
 A resident with tiles in flight on the async executor is PINNED
 (``pin``/``unpin`` refcounts): eviction skips pinned entries, so a scene
 whose dispatched tiles have not yet drained can never lose its weights
@@ -104,6 +109,9 @@ class SceneCache:
         self.capacity_bytes = int(capacity_mb * (1 << 20))
         self._entries: "OrderedDict[str, Tuple[PackedPlcore, int]]" = \
             OrderedDict()
+        # scene -> auxiliary resident (sampling.SceneAux) riding the
+        # entry; its nbytes is LIVE (trunk memo grows during serving)
+        self._aux: Dict[str, object] = {}
         self._pins: Dict[str, int] = {}
         # per-cell pin accounting (percell dispatch): scene -> cell ->
         # refcount. A sub-account of _pins, never a second gate — a
@@ -131,8 +139,45 @@ class SceneCache:
         return list(self._entries)
 
     @property
+    def aux_bytes(self) -> int:
+        """LIVE auxiliary resident bytes (stats + memo, re-read per call
+        because the memo grows/evicts during serving)."""
+        return sum(a.nbytes for a in self._aux.values())
+
+    @property
     def resident_bytes(self) -> int:
-        return sum(nb for _, nb in self._entries.values())
+        return (sum(nb for _, nb in self._entries.values())
+                + self.aux_bytes)
+
+    def aux(self, scene_id: str):
+        """The scene's auxiliary resident, or None if never built (or
+        dropped with an eviction)."""
+        return self._aux.get(scene_id)
+
+    def ensure_aux(self, scene_id: str, builder) -> object:
+        """Attach (or fetch) the per-scene auxiliary resident.
+        ``builder(pp)`` runs once per residency — e.g. the adaptive
+        probe (``pipeline.build_scene_aux``) — and its product rides the
+        cache entry: counted against ``capacity_mb`` at LIVE size,
+        dropped when the scene evicts, protected by the scene's pins
+        while tiles are in flight. The scene must be resident (``get``
+        it first): aux without weights has nothing to serve."""
+        aux = self._aux.get(scene_id)
+        if aux is not None:
+            return aux
+        ent = self._entries.get(scene_id)
+        if ent is None:
+            raise KeyError(f"scene {scene_id!r} is not resident — "
+                           "load it before attaching aux")
+        tr = self.tracer
+        sp = tr.begin("cache.aux_build", cat="cache", scene=scene_id,
+                      host=self.trace_host) if tr.enabled else None
+        aux = builder(ent[0])
+        self._aux[scene_id] = aux
+        if sp is not None:
+            tr.end(sp, ok=True, bytes=int(aux.nbytes))
+        self._evict_over_capacity(keep=scene_id)
+        return aux
 
     def pin(self, scene_id: str, cell: "Optional[int]" = None) -> None:
         """Refcount one in-flight use of a resident scene: a pinned entry
@@ -189,10 +234,28 @@ class SceneCache:
         if scene_id not in self._entries or scene_id in self._pins:
             return False
         del self._entries[scene_id]
+        self._aux.pop(scene_id, None)
         self.evictions += 1
         self.tracer.event("cache.evict", cat="cache", scene=scene_id,
                           host=self.trace_host, reason="discard")
         return True
+
+    def _evict_over_capacity(self, keep: str) -> None:
+        """Evict LRU-first until the LIVE resident total (weights + aux)
+        fits capacity. ``keep`` (the just-touched scene) and pinned
+        entries are never victims; an evicted scene's aux goes with it."""
+        for victim in list(self._entries):   # LRU -> MRU order
+            if (len(self._entries) <= 1
+                    or self.resident_bytes <= self.capacity_bytes):
+                break
+            if victim == keep or victim in self._pins:
+                continue
+            del self._entries[victim]
+            self._aux.pop(victim, None)
+            self.evictions += 1
+            if self.tracer.enabled:
+                self.tracer.event("cache.evict", cat="cache", scene=victim,
+                                  host=self.trace_host, reason="capacity")
 
     def failing_scenes(self) -> list:
         """Scenes currently in load-failure state (>= 1 consecutive real
@@ -250,17 +313,7 @@ class SceneCache:
         tr.end(sp, ok=True, bytes=nbytes)
         self._failed.pop(scene_id, None)
         self._entries[scene_id] = (pp, nbytes)
-        for victim in list(self._entries):   # LRU -> MRU order
-            if (len(self._entries) <= 1
-                    or self.resident_bytes <= self.capacity_bytes):
-                break
-            if victim == scene_id or victim in self._pins:
-                continue
-            del self._entries[victim]
-            self.evictions += 1
-            if tr.enabled:
-                tr.event("cache.evict", cat="cache", scene=victim,
-                         host=self.trace_host, reason="capacity")
+        self._evict_over_capacity(keep=scene_id)
         return pp
 
     def stats(self) -> dict:
@@ -271,6 +324,8 @@ class SceneCache:
             "hit_rate": round(self.hits / total, 4) if total else 0.0,
             "resident_scenes": len(self._entries),
             "pinned_scenes": len(self._pins),
+            "aux_scenes": len(self._aux),
+            "aux_mb": round(self.aux_bytes / (1 << 20), 3),
             "resident_mb": round(self.resident_bytes / (1 << 20), 3),
             "capacity_mb": round(self.capacity_bytes / (1 << 20), 3),
             "load_failures": self.load_failures,

@@ -77,13 +77,14 @@ def _seed_loop(scene, **kw):
                                           rays_per_batch=BATCH, **kw))]
 
 
-def _engine_imgs(scene, *, sharded=False, **engine_kw):
+def _engine_imgs(scene, *, sharded=False, fused=False, **engine_kw):
     """The engine side of a row: two coalescable same-scene requests plus
     a second resolution, images in submit order."""
     cfg, params = scene["cfg"], scene["params"]
     mesh = scene["mesh"] if sharded else None
     cache = SceneCache(
-        lambda sid: PackedPlcore(cfg, params, shard_mesh=mesh),
+        lambda sid: PackedPlcore(cfg, params, shard_mesh=mesh,
+                                 use_kernel=fused, fuse_two_pass=fused),
         capacity_mb=64.0)
     eng = RenderEngine(cache, tile_rays=BATCH, **engine_kw)
     reqs = [RenderRequest("s0", hw=HW), RenderRequest("s0", hw=12),
@@ -153,6 +154,12 @@ _MATRIX = {
                                percell_dispatch=True),
         lambda s: _engine_imgs(s, sharded=True, route_by_shard=True),
         None),
+    # ASDR acceptance: adaptive sampling OFF is not a degraded mode — an
+    # engine with the flag explicitly off is the construction-for-
+    # construction SAME pipeline as one that never heard of it
+    "adaptive_off_engine__engine": (
+        lambda s: _engine_imgs(s, fused=True, adaptive_sampling=False),
+        lambda s: _engine_imgs(s, fused=True), None),
 }
 
 
@@ -179,5 +186,5 @@ def test_matrix_breadth():
     exact = {name for name, (_, _, atol) in _MATRIX.items()
              if atol is None}
     for needle in ("seed_loop", "sharded", "engine_coalesced",
-                   "engine_depth3", "percell"):
+                   "engine_depth3", "percell", "adaptive"):
         assert any(needle in name for name in exact), needle

@@ -145,3 +145,98 @@ def test_merge_sorted_ranks_matches_sort(a, b):
     assert (np.diff(merged, axis=-1) >= 0).all(), "merge must be sorted"
     np.testing.assert_array_equal(
         merged, np.asarray(sampling.merge_sorted(t_a, t_b)))
+
+
+# ---------------------------------------------------- adaptive sampling ---
+@pytest.fixture(scope="module")
+def adaptive_scene():
+    """Fused-kernel pipeline over a mixed empty-space scene (biased sigma
+    head) plus its calibration aux — shared by the ASDR properties."""
+    from repro.core.pipeline import (AdaptiveRenderer, PackedPlcore,
+                                     build_scene_aux)
+    cfg = tiny()
+    params = init_params(plcore_decls(cfg), jax.random.PRNGKey(0),
+                         "float32")
+    for net in params:
+        params[net]["sigma"]["b"] = params[net]["sigma"]["b"] - 0.5
+    pp = PackedPlcore(cfg, params, use_kernel=True, fuse_two_pass=True)
+    aux = build_scene_aux(pp, grid_res=16, probe_hw=6, memo_mb=8.0)
+    return pp, AdaptiveRenderer(pp, aux)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=(1 << 16)))
+def test_adaptive_bucket_purity(adaptive_scene, seed):
+    """Every adaptive tile the scheduler coalesces is BUDGET-PURE: all
+    its rays classify into the class whose n_fine the tile renders at,
+    and dead-bucket tiles carry only hinted-dead (provably-empty) rays —
+    no ray is ever over/under-sampled by its tile-mates."""
+    from repro.serving import RenderEngine, RenderRequest, SceneCache
+    pp, _ = adaptive_scene
+    rng = np.random.default_rng(seed)
+    cache = SceneCache(lambda sid: pp, capacity_mb=64.0)
+    eng = RenderEngine(cache, tile_rays=64, adaptive_sampling=True,
+                       memo_mb=8.0, adaptive_grid_res=16,
+                       adaptive_probe_hw=6)
+    seen = []
+    orig = eng.adaptive.account
+    eng.adaptive.account = (
+        lambda tile, info, stats: (seen.append((tile, info)),
+                                   orig(tile, info, stats))[1])
+    for _ in range(2):
+        eng.submit(RenderRequest("s0", hw=12,
+                                 theta=float(rng.uniform(0, 360)),
+                                 phi=float(rng.uniform(-35, -15))))
+    eng.drain()
+    assert seen, "no adaptive tiles dispatched"
+    ar = eng.adaptive.renderer("s0", pp)
+    for tile, info in seen:
+        cls = ar.classify_rays(tile.rays_o, tile.rays_d)
+        hint = ar.dead_hint(tile.rays_o, tile.rays_d)
+        if tile.dead_bucket:
+            assert hint.all(), "dead-bucket tile holds a non-hinted ray"
+        else:
+            assert not hint.any(), "hinted-dead ray leaked into a class tile"
+            c = ar.budgets.index(tile.budget)
+            assert (cls == c).all(), (tile.budget, np.unique(cls))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=(1 << 16)))
+def test_memo_hit_rows_bit_identical(adaptive_scene, seed):
+    """Rows consumed from the trunk memo equal a fresh trunk evaluation
+    at the SAME voxel centers bit-for-bit — memoization is a cache, not
+    an approximation (the dead-ray recon consumes exactly what the
+    kernel's trunk would have produced)."""
+    from repro.core.pipeline import trunk_rows
+    pp, ar = adaptive_scene
+    rng = np.random.default_rng(seed)
+    o = rng.uniform(-0.3, 0.3, (8, 3)).astype(np.float32)
+    d = rng.uniform(0.2, 1.0, (8, 3)).astype(np.float32)
+    dead, vox, sigma, feat = ar.dead_and_rows(o, d)
+    idx = np.nonzero(dead)[0]
+    if not idx.size:
+        return
+    fresh = trunk_rows(pp, ar.aux.stats.voxel_centers(
+        vox[idx].reshape(-1)))
+    got = np.concatenate([sigma[idx].reshape(-1, 1),
+                          feat[idx].reshape(fresh.shape[0], -1)], axis=1)
+    np.testing.assert_array_equal(got, fresh)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=(1 << 16)))
+def test_adaptive_per_bucket_permutation_invariance(adaptive_scene, seed):
+    """Permuting the rays of an adaptive tile permutes its output rows
+    and changes nothing else — bit for bit, across the mixed dead/alive
+    path (memo warmed first so both orders see identical residency)."""
+    _, ar = adaptive_scene
+    rng = np.random.default_rng(seed)
+    o = rng.uniform(-0.4, 0.4, (N_RAYS, 3)).astype(np.float32)
+    d = rng.uniform(0.2, 1.0, (N_RAYS, 3)).astype(np.float32)
+    ar.render_tile(o, d, budget=int(ar.budgets[0]))      # warm the memo
+    base = np.asarray(ar.render_tile(o, d, budget=int(ar.budgets[0]))[0])
+    perm = rng.permutation(N_RAYS)
+    shuf = np.asarray(ar.render_tile(o[perm], d[perm],
+                                     budget=int(ar.budgets[0]))[0])
+    np.testing.assert_array_equal(shuf, base[perm])
